@@ -1,0 +1,16 @@
+"""Shared benchmark plumbing: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def emit(rows: list[tuple]) -> None:
+    """rows: (name, us_per_call, derived)"""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

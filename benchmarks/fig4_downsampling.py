@@ -1,0 +1,65 @@
+"""Paper Fig. 4: impact of the number and cumulative size of downsampled
+partitions on prediction error (eager-1 tasks).
+
+We enumerate random subsets of the 10 geometric partitions (the paper uses
+all 1013 combinations; we sample 200 per task for benchmark runtime) and
+report how error varies with cumulative-size fraction, reproducing the
+paper's observation: combinations below ~10% cumulative size are noisy;
+above it, partition count barely matters (>=3 partitions).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+
+import numpy as np
+
+from repro.core import LotaruEstimator, get_node, profile_cluster, profile_node, target_nodes
+from repro.core.blr import fit_task
+from repro.core.downsample import partition_sizes
+from repro.sched.simulator import ClusterSimulator
+from repro.sched.workflows import INPUTS, WORKFLOWS
+
+
+REP_TASKS = ["bwa", "fastqc", "markduplicates", "genotyping_hc",
+             "samtools_f_a_f", "bcftools_stats"]
+
+
+def run(n_subsets: int = 200, seed: int = 0) -> list[tuple]:
+    t0 = time.perf_counter()
+    sim = ClusterSimulator(seed=seed)
+    truth = ClusterSimulator(seed=seed + 1000)
+    local = get_node("local-cpu")
+    size = INPUTS[("eager", 1)]
+    sizes = np.array(partition_sizes(size, 10))
+    tasks = {t.name: t for t in WORKFLOWS["eager"]}
+    rng = np.random.default_rng(seed)
+
+    all_idx = list(range(10))
+    subsets = []
+    for k in range(2, 11):
+        combos = list(itertools.combinations(all_idx, k))
+        rng.shuffle(combos)
+        subsets.extend(combos[:max(2, n_subsets // 9)])
+
+    print(f"{'task':18s} {'<10% cum':>12s} {'>=10% cum':>12s} {'n<':>4s} {'n>':>4s}")
+    rows = []
+    for name in REP_TASKS:
+        t = tasks[name]
+        runtimes = np.array([sim.run_task(t, local, s) for s in sizes])
+        actual = truth.run_task(t, local, size)
+        lo, hi = [], []
+        for sub in subsets:
+            idx = list(sub)
+            model = fit_task(sizes[idx], runtimes[idx])
+            pred = float(np.asarray(model.predict(size)[0]))
+            err = abs(pred - actual) / actual
+            frac = sizes[idx].sum() / size
+            (hi if frac >= 0.10 else lo).append(err)
+        print(f"{name:18s} {100*np.median(lo):11.2f}% {100*np.median(hi):11.2f}%"
+              f" {len(lo):4d} {len(hi):4d}")
+        rows.append((f"fig4.downsampling.{name}",
+                     (time.perf_counter() - t0) * 1e6 / len(REP_TASKS),
+                     f"median_err_lowcum={100*np.median(lo):.2f}%"
+                     f";highcum={100*np.median(hi):.2f}%"))
+    return rows

@@ -1,0 +1,30 @@
+"""Paper Fig. 5: cumulative distribution of prediction errors for the four
+approaches (eager-1 and atacseq-1)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sched.evaluation import run_evaluation
+
+from .common import timed
+
+
+def run() -> list[tuple]:
+    res, us = timed(run_evaluation, seed=0, heterogeneous=False)
+    rows = []
+    for wf in ("eager-1", "atacseq-1"):
+        print(f"-- {wf}: error CDF (fraction of tasks with err <= x)")
+        print(f"{'x':>6s} " + " ".join(f"{a:>9s}" for a in
+                                       ("lotaru", "naive", "online_m", "online_p")))
+        for x in (0.05, 0.10, 0.20, 0.50, 1.00):
+            vals = []
+            for a in ("lotaru", "naive", "online_m", "online_p"):
+                errs = res.all_errors(a, workflow=wf)
+                vals.append(float(np.mean(errs <= x)))
+            print(f"{x:6.2f} " + " ".join(f"{v:9.2f}" for v in vals))
+        e_l = res.all_errors("lotaru", workflow=wf)
+        e_p = res.all_errors("online_p", workflow=wf)
+        rows.append((f"fig5.cdf.{wf}", us / 2,
+                     f"p50_lotaru={100*np.median(e_l):.2f}%"
+                     f";p50_online_p={100*np.median(e_p):.2f}%"))
+    return rows

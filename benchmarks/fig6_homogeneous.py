@@ -1,0 +1,29 @@
+"""Paper Fig. 6: prediction errors on a homogeneous cluster (target = the
+local machine type; no factor adjustment needed)."""
+from __future__ import annotations
+
+from repro.sched.evaluation import run_evaluation
+from repro.sched.workflows import INPUTS
+
+from .common import timed
+
+
+def run() -> list[tuple]:
+    res, us = timed(run_evaluation, seed=0, heterogeneous=False)
+    rows = []
+    print(f"{'workflow':14s} " + " ".join(f"{a:>9s}" for a in
+                                          ("lotaru", "naive", "online_m", "online_p")))
+    for (wf, ds) in INPUTS:
+        key = f"{wf}-{ds}"
+        vals = [100 * res.mpe(a, workflow=key) for a in
+                ("lotaru", "naive", "online_m", "online_p")]
+        print(f"{key:14s} " + " ".join(f"{v:8.2f}%" for v in vals))
+    overall = {a: 100 * res.mpe(a) for a in ("lotaru", "naive", "online_m",
+                                             "online_p")}
+    print("overall        " + " ".join(f"{overall[a]:8.2f}%" for a in
+                                       ("lotaru", "naive", "online_m", "online_p")))
+    rows.append(("fig6.homogeneous_mpe", us,
+                 f"lotaru={overall['lotaru']:.2f}%;best_baseline="
+                 f"{min(overall['naive'], overall['online_m'], overall['online_p']):.2f}%"
+                 f";paper=5.70%vs10.34%"))
+    return rows

@@ -1,0 +1,33 @@
+"""§Roofline: the three-term table over all dry-run cells (v5e constants)."""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+from repro.sched.simulator import load_dryrun_cells
+
+ART = Path(__file__).resolve().parents[1] / "experiments" / "artifacts" / "dryrun"
+
+
+def run() -> list[tuple]:
+    t0 = time.perf_counter()
+    cells = load_dryrun_cells(ART)
+    if not cells:
+        print("no dry-run artifacts — run repro.launch.dryrun first")
+        return [("roofline.skipped", 0.0, "no artifacts")]
+    print(f"{'cell':60s} {'comp_s':>9s} {'mem_s':>9s} {'coll_s':>9s} "
+          f"{'bound':>10s} {'useful':>7s} {'rf':>6s}")
+    worst = None
+    for c in cells:
+        r = c["roofline"]
+        name = f"{c['arch']}.{c['shape']}.{c['mesh']}"
+        print(f"{name:60s} {r['compute_s']:9.3e} {r['memory_s']:9.3e} "
+              f"{r['collective_s']:9.3e} {r['bound']:>10s} "
+              f"{r['useful_flop_fraction']:7.2f} {r['roofline_fraction']:6.3f}")
+        if c["shape"] != "decode_32k" and c["shape"] != "long_500k":
+            if worst is None or r["roofline_fraction"] < worst[1]:
+                worst = (name, r["roofline_fraction"])
+    us = (time.perf_counter() - t0) * 1e6
+    return [("roofline.table", us,
+             f"cells={len(cells)};worst_nondec={worst[0] if worst else 'n/a'}"
+             f"@{worst[1]:.3f}" if worst else f"cells={len(cells)}")]

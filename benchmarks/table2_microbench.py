@@ -1,0 +1,27 @@
+"""Paper Table 2: infrastructure profiling results for all six node types.
+
+The local node's scores are *really measured* on this host (sysbench-like
+primes, JAX matmul LINPACK analogue, memory stream, fio-like file I/O);
+target accelerator node types are simulated measurements.
+"""
+from __future__ import annotations
+
+from repro.core import profile_cluster, profile_local, target_nodes
+
+from .common import timed
+
+
+def run() -> list[tuple]:
+    local, us_local = timed(profile_local, fast=True)
+    benches, us_cluster = timed(profile_cluster, target_nodes(), 0)
+    rows = []
+    hdr = f"{'node':10s} {'cpu_ev/s':>9s} {'gflops':>9s} {'mem GB/s':>9s} {'io MB/s':>8s} {'link GB/s':>9s}"
+    print(hdr)
+    for b in [local] + list(benches.values()):
+        print(f"{b.node:10s} {b.cpu_events_s:9.0f} {b.matmul_gflops:9.1f} "
+              f"{b.mem_gbps:9.1f} {b.io_read_mbps:8.0f} {b.link_gbps:9.1f}")
+    rows.append(("table2.local_profile", us_local,
+                 f"cpu={local.cpu_events_s:.0f}ev/s;gflops={local.matmul_gflops:.1f}"))
+    rows.append(("table2.cluster_profile", us_cluster,
+                 f"nodes={len(benches)}"))
+    return rows

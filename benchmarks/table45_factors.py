@@ -1,0 +1,27 @@
+"""Paper Tables 4+5: estimated vs actual runtime-adjustment factors
+(eager-1), per node and per task."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import target_nodes
+from repro.sched.evaluation import factor_table
+
+from .common import timed
+
+
+def run() -> list[tuple]:
+    rows, us = timed(factor_table, seed=0, workflow="eager", ds=1)
+    names = [n.name for n in target_nodes()]
+    med = {n: float(np.median([r[n]["diff"] for r in rows])) for n in names}
+    print("median |estimated - actual| factor per node (paper Table 4: "
+          "0.15/0.14/0.17/0.06/0.03):")
+    print("  " + "  ".join(f"{n}={med[n]:.3f}" for n in names))
+    print(f"\nper-task factors on {names[-1]} (paper Table 5):")
+    print(f"{'task':24s} {'w':>5s} {'est':>6s} {'actual':>7s} {'diff':>6s}")
+    for r in rows:
+        e = r[names[-1]]
+        print(f"{r['task']:24s} {r['w']:5.2f} {e['estimated']:6.2f} "
+              f"{e['actual']:7.2f} {e['diff']:6.3f}")
+    return [("table45.factor_accuracy", us,
+             ";".join(f"{n}={med[n]:.3f}" for n in names))]

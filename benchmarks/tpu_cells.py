@@ -1,0 +1,77 @@
+"""Beyond-paper: LotaruML over the (arch x shape) dry-run cells.
+
+Tasks = compiled workload cells; input size = token count; local runs =
+the developer CPU node; adjustment = three-term roofline factor.  MPE of
+step-time predictions across heterogeneous TPU node types, vs the same
+baselines (which are node-unaware).
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (BASELINES, LotaruML, get_node, profile_cluster,
+                        profile_node, target_nodes)
+from repro.core.downsample import partition_sizes
+from repro.sched.simulator import ClusterSimulator, load_dryrun_cells
+
+ART = Path(__file__).resolve().parents[1] / "experiments" / "artifacts" / "dryrun"
+
+
+def run(mesh: str = "pod16x16") -> list[tuple]:
+    t0 = time.perf_counter()
+    cells = [c for c in load_dryrun_cells(ART) if c["mesh"] == mesh]
+    if not cells:
+        print("no dry-run artifacts found — run repro.launch.dryrun first")
+        return [("tpu_cells.skipped", 0.0, "no artifacts")]
+    sim = ClusterSimulator(seed=0)
+    truth = ClusterSimulator(seed=1000)
+    local = get_node("local-cpu")
+    local_bench = profile_node(local, np.random.default_rng(7))
+    tbenches = profile_cluster(target_nodes(), seed=13)
+    est = LotaruML(local_bench, tbenches)
+
+    for c in cells:
+        est.fit_cell(
+            c, lambda cell, frac: sim.run_cell(cell, local, frac),
+            run_local_throttled=lambda cell, frac: sim.run_cell(
+                cell, local, frac, cpu_factor=0.8))
+
+    base_fits = {}
+    for c in cells:
+        name = f"{c['arch']}__{c['shape']}"
+        fracs = np.array(partition_sizes(1.0, 6))
+        tokens = fracs * c["roofline"]["step_tokens"]
+        runtimes = np.array([sim.run_cell(c, local, f) for f in fracs])
+        base_fits[name] = {b: cls().fit(tokens, runtimes)
+                           for b, cls in BASELINES.items()}
+
+    errs: dict[str, list] = {a: [] for a in
+                             ["lotaru_ml", "lotaru_scalar", "naive",
+                              "online_m", "online_p"]}
+    for c in cells:
+        name = f"{c['arch']}__{c['shape']}"
+        for node in target_nodes():
+            actual = truth.run_cell(c, node)
+            pred, _ = est.predict(name, node.name)
+            errs["lotaru_ml"].append(abs(pred - actual) / actual)
+            ps, _ = est.predict_scalar(name, node.name)
+            errs["lotaru_scalar"].append(abs(ps - actual) / actual)
+            for b in ("naive", "online_m", "online_p"):
+                p = float(np.asarray(
+                    base_fits[name][b].predict(
+                        c["roofline"]["step_tokens"])).reshape(-1)[0])
+                errs[b].append(abs(p - actual) / actual)
+
+    print(f"{len(cells)} cells x {len(target_nodes())} node types ({mesh})")
+    out = []
+    for a, es in errs.items():
+        print(f"  {a:10s}: MPE {100*np.median(es):7.2f}%  p90 {100*np.percentile(es,90):7.2f}%")
+    us = (time.perf_counter() - t0) * 1e6
+    out.append(("tpu_cells.heterogeneous_mpe", us,
+                f"lotaru_ml={100*np.median(errs['lotaru_ml']):.2f}%"
+                f";online_p={100*np.median(errs['online_p']):.2f}%"
+                f";cells={len(cells)}"))
+    return out

@@ -1,0 +1,48 @@
+"""End-to-end driver: train a ~100M-param dense LM with the full stack —
+synthetic deterministic data pipeline, AdamW (cosine schedule), chunked
+xent, scan-over-layers, async checkpointing, restart safety.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+On this single-CPU container a step takes a few seconds; the loss should
+fall well below ln(vocab) ~ 9.2 within a few hundred steps (the synthetic
+stream has learnable structure).
+"""
+import argparse
+import time
+
+from repro.launch.train import train
+from repro.models import ModelConfig
+from repro.optim import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        arch="demo-100m", family="dense",
+        n_layers=14, d_model=640, n_heads=10, n_kv_heads=10, d_ff=2560,
+        vocab=8_192, head_dim=64, norm="rmsnorm", act="swiglu",
+        attn_chunk=128, xent_chunk=128, remat="full")
+    n = cfg.param_count()
+    print(f"arch demo-100m: {n/1e6:.1f}M params, "
+          f"{args.steps} steps @ {args.seq}x{args.batch}")
+    t0 = time.time()
+    rep = train(cfg, steps=args.steps, seq=args.seq, global_batch=args.batch,
+                ckpt_dir=args.ckpt, ckpt_every=50,
+                opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=30,
+                                    total_steps=args.steps),
+                verbose=True, log_every=10)
+    dt = time.time() - t0
+    print(f"\nfinal loss {rep.losses[-1]:.4f} (start {rep.losses[0]:.4f}) "
+          f"in {dt/60:.1f} min; {1e3*dt/rep.steps_run:.0f} ms/step")
+    assert rep.losses[-1] < rep.losses[0], "loss did not improve"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Dev loop: run every smoke config through loss / prefill / decode."""
+import sys
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import list_archs, smoke_config
+from repro.models import build_model, AxisRules
+
+rules = AxisRules(fsdp_axes=(), dp_axes=())
+B, T = 2, 24
+
+want = sys.argv[1:] or list_archs()
+for arch in want:
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    tokens = jax.random.randint(key, (B, T), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "vlm":
+        nv = 8
+        batch["vision_embeds"] = jnp.ones((B, nv, cfg.d_model), jnp.bfloat16) * 0.1
+        pos = jnp.broadcast_to(jnp.arange(T + nv, dtype=jnp.int32)[None, :, None],
+                               (B, T + nv, 3))
+        batch["positions"] = pos
+    if cfg.family == "encdec":
+        batch["src_embeds"] = jax.random.normal(key, (B, 16, cfg.d_model)) * 0.1
+
+    loss, metrics = jax.jit(lambda p, b: model.loss(p, b, rules))(params, batch)
+    assert np.isfinite(float(loss)), (arch, loss)
+
+    # prefill + decode
+    caches = model.init_caches(B, max_len=T + 8, cross_len=16)
+    logits, caches = jax.jit(lambda p, b, c: model.prefill(p, b, c, rules))(
+        params, batch, caches)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32))), arch
+    step_tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    dbatch = {"tokens": step_tok}
+    if cfg.family == "vlm":
+        dbatch["positions"] = jnp.full((B, 1, 3), T + 8, jnp.int32)
+    logits2, caches = jax.jit(
+        lambda p, b, c, i: model.decode(p, b, c, i, rules))(
+        params, dbatch, caches, jnp.asarray(T, jnp.int32))
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32))), arch
+    print(f"OK {arch:28s} loss={float(loss):.3f} params={n_params:,}")
+print("ALL OK")

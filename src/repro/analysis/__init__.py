@@ -1,0 +1,5 @@
+from .hlo_stats import HloStats, analyze_hlo, parse_hlo
+from .roofline import HBM_BW, LINK_BW, PEAK_FLOPS, Roofline, model_flops
+
+__all__ = ["HloStats", "analyze_hlo", "parse_hlo", "HBM_BW", "LINK_BW",
+           "PEAK_FLOPS", "Roofline", "model_flops"]

@@ -1,0 +1,339 @@
+"""Trip-count-aware statistics over compiled (SPMD, per-device) HLO text.
+
+XLA's HloCostAnalysis counts ``while`` bodies once, so for scan-over-layers
+models its flops/bytes are ~n_layers too low.  We parse the module text:
+
+  * computation blocks + a module-wide symbol table (instr name -> shape),
+  * ``while`` instructions with ``known_trip_count`` backend configs
+    (fallback: largest s32 constant in the condition block),
+  * per-block multipliers = product of enclosing loop trip counts,
+
+and accumulate, per device:
+  * dot/conv FLOPs   : 2 * prod(out) * prod(lhs contracting dims) * mult
+  * collective bytes : ring-model wire traffic (all-reduce 2x(g-1)/g, etc.)
+  * hbm bytes        : sum of (output + operand) bytes of top-level ops —
+    an upper bound on HBM traffic (CPU-backend fusion is coarser than TPU).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "iota"}
+# ops whose operand/output traffic counts toward the HBM term: compute and
+# data-movement kernels.  Pure elementwise/broadcast/convert ops are assumed
+# fused into their consumers (TPU XLA behaviour); CPU-backend leaves them
+# top-level, which would otherwise overcount ~5-10x.
+_MEM_OPS = {"dot", "convolution", "fusion", "scatter", "gather",
+            "dynamic-slice", "dynamic-update-slice", "reduce", "reduce-window",
+            "sort", "copy", "concatenate", "pad", "slice", "select-and-scatter",
+            "custom-call", "cholesky", "triangular-solve", "fft", "rng",
+            "transpose"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# einsum signatures of loops whose production path is a Pallas kernel
+# (flash attention fwd/bwd, SSD scan): their loop-internal tensors live in
+# VMEM on TPU, so with kernel_vmem=True their HBM charge reduces to the
+# streamed slices (K/V chunk reads, output writes).
+_KERNEL_SIG_RE = re.compile(r"(bthg|bchd->|->bthgc|blmh|bmhp->|blhn|bhpn->)")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([a-z0-9\-]+)\(")
+_BLOCK_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*{")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_WINDOW_RE = re.compile(r"window=\{size=([0-9x]+)")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_text: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _operand_names(line: str, opcode: str) -> list[str]:
+    start = line.find(opcode + "(")
+    if start < 0:
+        return []
+    i = start + len(opcode) + 1
+    depth = 1
+    j = i
+    while j < len(line) and depth:
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+        j += 1
+    return re.findall(r"%([\w.\-]+)", line[i:j - 1])
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0                           # per device, trip-aware
+    collective_bytes: int = 0                    # wire bytes per device
+    collective_counts: dict = field(default_factory=dict)   # dynamic counts
+    collective_bytes_by_op: dict = field(default_factory=dict)
+    hbm_bytes: float = 0.0                       # fusion-aware traffic proxy
+    hbm_bytes_naive: float = 0.0                 # all-top-level-ops upper bound
+    hbm_bytes_kernel_adj: float = 0.0            # Pallas-kernel-aware (VMEM)
+    kernel_blocks: int = 0
+    n_while_loops: int = 0
+    static_collectives: int = 0
+    dot_flops_by_block: dict = field(default_factory=dict)
+
+
+def _split_blocks(text: str) -> dict[str, list[str]]:
+    blocks: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and "{" in line:
+            m = _BLOCK_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                blocks[cur] = []
+                continue
+        if cur is not None:
+            if line.startswith("}"):
+                cur = None
+                continue
+            blocks[cur].append(line)
+    return blocks
+
+
+def analyze_hlo(text: str, default_group: int = 1) -> HloStats:
+    blocks = _split_blocks(text)
+    entry = None
+    for name in blocks:
+        if ".clone" not in name and "_spmd" in name and name.startswith("main"):
+            entry = name
+    if entry is None:  # fall back: the block containing whiles or last block
+        for name in blocks:
+            if name.startswith("main") or name == "ENTRY":
+                entry = name
+        entry = entry or (list(blocks)[-1] if blocks else None)
+
+    # symbol table: instr -> shape text (module-wide; names are unique)
+    shapes: dict[str, str] = {}
+    producers: dict[str, tuple[str, list[str]]] = {}
+    # whiles: (container_block, body, cond, trip)
+    whiles: list[tuple[str, str, str, int]] = []
+    for bname, lines in blocks.items():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, shape_text, opcode = m.groups()
+            shapes[name] = shape_text
+            if opcode == "convert":
+                producers[name] = (opcode, _operand_names(line, opcode))
+            if opcode == "while":
+                body = _BODY_RE.search(line)
+                cond = _COND_RE.search(line)
+                trip_m = _TRIP_RE.search(line)
+                trip = int(trip_m.group(1)) if trip_m else 0
+                whiles.append((bname, body.group(1) if body else "",
+                               cond.group(1) if cond else "", trip))
+
+    # fallback trip counts from condition constants
+    def cond_trip(cond: str) -> int:
+        best = 1
+        for line in blocks.get(cond, []):
+            for m in re.finditer(r"s32\[\] constant\((\d+)\)", line):
+                best = max(best, int(m.group(1)))
+        return best
+
+    mult: dict[str, float] = defaultdict(float)
+    if entry:
+        mult[entry] = 1.0
+    # fixpoint propagation through (possibly nested) loops
+    for _ in range(len(whiles) + 2):
+        changed = False
+        for container, body, cond, trip in whiles:
+            if mult[container] <= 0:
+                continue
+            t = trip if trip > 0 else cond_trip(cond)
+            want = mult[container] * max(t, 1)
+            if body and abs(mult[body] - want) > 1e-9:
+                mult[body] = want
+                changed = True
+            if cond and abs(mult[cond] - want) > 1e-9:
+                mult[cond] = want
+        if not changed:
+            break
+
+    stats = HloStats(n_while_loops=len(whiles))
+    counts: dict[str, float] = defaultdict(float)
+    by_op: dict[str, float] = defaultdict(float)
+    flops_by_block: dict[str, float] = defaultdict(float)
+
+    # blocks whose production path is a fused Pallas kernel (flash attn /
+    # SSD): loop-internal tensors are VMEM-resident on TPU
+    kernel_blocks = set()
+    for bname, lines in blocks.items():
+        if mult.get(bname, 0.0) > 0 and any(
+                _KERNEL_SIG_RE.search(l) for l in lines if " dot(" in l):
+            kernel_blocks.add(bname)
+    stats.kernel_blocks = len(kernel_blocks)
+
+    for bname, lines in blocks.items():
+        m_b = mult.get(bname, 0.0)
+        if m_b <= 0:
+            continue
+        in_kernel = bname in kernel_blocks
+        # each named buffer is charged once per block execution for the
+        # kernel-adjusted view: CPU-backend fusion fragmentation otherwise
+        # bills one tensor through many small fusions (TPU fuses wider)
+        seen_buffers: set[str] = set()
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, shape_text, opcode = m.groups()
+            if opcode in _FREE_OPS:
+                continue
+            out_bytes = _shape_bytes(shape_text)
+            opnds = _operand_names(line, opcode)
+            in_bytes = sum(_shape_bytes(shapes.get(o, "")) for o in opnds)
+
+            if opcode == "dot":
+                out_dims = _shape_dims(shape_text)
+                cd = _LHS_CDIMS_RE.search(line)
+                lhs_shape = _shape_dims(shapes.get(opnds[0], "")) if opnds else []
+                k = 1
+                if cd and lhs_shape:
+                    for idx in cd.group(1).split(","):
+                        if idx:
+                            k *= lhs_shape[int(idx)]
+                f = 2.0 * k
+                for d in out_dims:
+                    f *= d
+                stats.flops += f * m_b
+                flops_by_block[bname] += f * m_b
+            elif opcode == "convolution":
+                out_dims = _shape_dims(shape_text)
+                w = _WINDOW_RE.search(line)
+                ksz = 1
+                if w:
+                    for d in w.group(1).split("x"):
+                        ksz *= int(d)
+                f = 2.0 * ksz
+                for d in out_dims:
+                    f *= d
+                stats.flops += f * m_b
+            elif opcode in COLLECTIVE_OPS or any(
+                    opcode == c + sfx for c in COLLECTIVE_OPS
+                    for sfx in ("-start", "-done")):
+                base = next(c for c in COLLECTIVE_OPS if opcode.startswith(c))
+                if opcode.endswith("-done"):
+                    continue
+                g = default_group
+                gm = _GROUPS_RE.search(line)
+                if gm:
+                    g = max(int(gm.group(2)), 1)
+                payload = max(out_bytes, in_bytes)
+                # XLA:CPU has no native bf16 matmul, so it converts to f32
+                # *before* the SPMD gather; XLA:TPU gathers bf16 and
+                # converts after.  When the collective operand is a direct
+                # convert of a half-width tensor, charge the narrow size.
+                for o in opnds:
+                    o_shape = shapes.get(o, "")
+                    prod = producers.get(o)
+                    if prod and prod[1]:
+                        src_b = _shape_bytes(shapes.get(prod[1][0], ""))
+                        if 0 < src_b <= _shape_bytes(o_shape) // 2:
+                            payload //= 2
+                            break
+                    # CPU backend wraps the widening convert in a fusion
+                    # ("convert_bitcast_fusion"): same correction applies.
+                    if "convert" in o and o_shape.startswith(("f32", "s32")):
+                        payload //= 2
+                        break
+                if base == "all-reduce":
+                    wire = 2.0 * payload * (g - 1) / g
+                elif base == "collective-permute":
+                    wire = float(payload)
+                else:
+                    wire = payload * (g - 1) / g
+                stats.collective_bytes += int(wire * m_b)
+                counts[base] += m_b
+                by_op[base] += wire * m_b
+                stats.static_collectives += 1
+                stats.hbm_bytes += (out_bytes + in_bytes) * m_b
+                stats.hbm_bytes_naive += (out_bytes + in_bytes) * m_b
+                stats.hbm_bytes_kernel_adj += (out_bytes + in_bytes) * m_b
+                continue
+            stats.hbm_bytes_naive += (out_bytes + in_bytes) * m_b
+            if opcode not in _MEM_OPS:
+                continue
+            # data-movement ops: charge moved bytes, not full operand buffers
+            # (a dynamic-slice inside a scan body must not be charged the
+            # whole stacked parameter every iteration).
+            slice_like = opcode in ("dynamic-slice", "gather",
+                                    "dynamic-update-slice", "scatter")
+            if opcode in ("dynamic-slice", "gather"):
+                traffic = 2 * out_bytes
+            elif opcode in ("dynamic-update-slice", "scatter"):
+                op_sizes = [_shape_bytes(shapes.get(o, "")) for o in opnds]
+                upd = min([s for s in op_sizes if s > 0], default=out_bytes)
+                traffic = 2 * upd
+            elif opcode in ("copy", "transpose", "concatenate", "pad", "slice"):
+                traffic = 2 * out_bytes
+            else:
+                traffic = out_bytes + in_bytes
+            stats.hbm_bytes += traffic * m_b
+            # kernel-adjusted view: inside a flash/SSD loop only the
+            # streamed slices (K/V chunk reads, cache writes) touch HBM;
+            # outside, each buffer streams once per block execution.
+            if in_kernel and not slice_like:
+                continue
+            if slice_like:
+                stats.hbm_bytes_kernel_adj += traffic * m_b
+            else:
+                adj = out_bytes if name not in seen_buffers else 0
+                seen_buffers.add(name)
+                for o in opnds:
+                    if o not in seen_buffers:
+                        seen_buffers.add(o)
+                        adj += _shape_bytes(shapes.get(o, ""))
+                stats.hbm_bytes_kernel_adj += adj * m_b
+
+    stats.collective_counts = {k: int(v) for k, v in counts.items()}
+    stats.collective_bytes_by_op = {k: int(v) for k, v in by_op.items()}
+    stats.dot_flops_by_block = {k: v for k, v in
+                                sorted(flops_by_block.items(),
+                                       key=lambda kv: -kv[1])[:8]}
+    return stats
+
+
+# Back-compat simple parser (tests exercise both paths)
+def parse_hlo(hlo_text: str) -> HloStats:
+    return analyze_hlo(hlo_text)

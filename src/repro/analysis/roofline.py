@@ -1,0 +1,93 @@
+"""Three-term roofline model over dry-run artifacts (TPU v5e target).
+
+  compute term    = HLO_FLOPs_total    / (chips * PEAK_FLOPS)
+  memory term     = HLO_bytes_total    / (chips * HBM_BW)
+  collective term = collective_bytes_total / (chips * LINK_BW)
+
+cost_analysis() on the SPMD-partitioned module reports *per device* flops
+and bytes, and the HLO parse gives *per device* collective bytes, so each
+term reduces to per_device_quantity / per_chip_rate — we keep both views.
+
+MODEL_FLOPS uses the 6·N·D convention (N params — active params for MoE —
+D tokens processed) so the "useful fraction" HLO ratio catches remat and
+dispatch waste.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+# TPU v5e hardware constants (per chip) — from the assignment.
+PEAK_FLOPS = 197e12         # bf16 FLOP/s
+HBM_BW = 819e9              # bytes/s
+LINK_BW = 50e9              # bytes/s per ICI link
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops_total: float
+    step_tokens: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / LINK_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time estimate: max of the three overlappable terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flop_fraction(self) -> float:
+        hlo_total = self.flops_per_device * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS-time / achieved step time — the headline perf score."""
+        ideal = self.model_flops_total / (self.chips * PEAK_FLOPS)
+        t = self.step_time_s
+        return ideal / t if t else 0.0
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 collective_s=self.collective_s, bound=self.bound,
+                 step_time_s=self.step_time_s,
+                 useful_flop_fraction=self.useful_flop_fraction,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops(cfg, kind: str, seq: int, global_batch: int) -> tuple[float, int]:
+    """(6·N_active·tokens for train, 2·N·tokens for inference), tokens."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = seq * global_batch
+        return 6.0 * n_active * tokens, tokens
+    if kind == "prefill":
+        tokens = seq * global_batch
+        return 2.0 * n_active * tokens, tokens
+    # decode: one token per sequence
+    tokens = global_batch
+    return 2.0 * n_active * tokens, tokens

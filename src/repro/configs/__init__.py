@@ -1,0 +1,39 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch)`` returns the full published config; ``smoke_config``
+returns a reduced same-family config for CPU smoke tests (the full configs
+are only exercised abstractly via the dry-run).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "seamless-m4t-large-v2",
+    "stablelm-12b",
+    "starcoder2-15b",
+    "qwen2-7b",
+    "stablelm-1.6b",
+    "llama4-maverick-400b-a17b",
+    "qwen3-moe-30b-a3b",
+    "zamba2-1.2b",
+    "qwen2-vl-7b",
+    "mamba2-1.3b",
+]
+
+
+def _module(arch: str):
+    return importlib.import_module(
+        "repro.configs." + arch.replace("-", "_").replace(".", "_"))
+
+
+def get_config(arch: str):
+    return _module(arch).full_config()
+
+
+def smoke_config(arch: str):
+    return _module(arch).smoke_config()
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)

@@ -1,0 +1,27 @@
+"""The paper's primary contribution: Lotaru's four phases as a composable
+system — infrastructure profiling, downsampled local execution, Bayesian
+linear regression with Pearson gating, per-node factor adjustment — plus
+the accelerator-plane integration (LotaruML) that feeds the scheduler."""
+from .blr import (BLRPosterior, TaskModel, fit, fit_task, pearson, predict,
+                  predict_interval, CORRELATION_THRESHOLD)
+from .adjust import (cpu_weight, deviation, roofline_weights, runtime_factor,
+                     runtime_factor3)
+from .baselines import BASELINES, NaiveEstimator, OnlineM, OnlineP
+from .downsample import (WorkloadPartition, downsample_workload,
+                         partition_sizes, reduced_model_factor)
+from .estimator import (FittedCell, FittedTask, LotaruEstimator, LotaruML,
+                        young_daly_interval)
+from .nodes import NODE_TYPES, NodeType, PAPER_ALIAS, get_node, target_nodes
+from .profiler import BenchResult, profile_cluster, profile_local, profile_node
+
+__all__ = [
+    "BLRPosterior", "TaskModel", "fit", "fit_task", "pearson", "predict",
+    "predict_interval", "CORRELATION_THRESHOLD", "cpu_weight", "deviation",
+    "roofline_weights", "runtime_factor", "runtime_factor3", "BASELINES",
+    "NaiveEstimator", "OnlineM", "OnlineP", "WorkloadPartition",
+    "downsample_workload", "partition_sizes", "reduced_model_factor",
+    "FittedCell", "FittedTask", "LotaruEstimator", "LotaruML",
+    "young_daly_interval", "NODE_TYPES", "NodeType", "PAPER_ALIAS",
+    "get_node", "target_nodes", "BenchResult", "profile_cluster",
+    "profile_local", "profile_node",
+]

@@ -1,0 +1,62 @@
+"""Phase 4: model adjustment for the target infrastructure (paper §3.4).
+
+    dev  = (t_reducedCPU - t_normal) / t_normal                (per sample)
+    w    = clamp( median(dev) / (f_old/f_new - 1), 0, 1 )      (eq. 5)
+    f_t  = w * cpu_local/cpu_target + (1-w) * io_local/io_target   (eq. 6)
+    t(node) = t(local) * f_t
+
+Beyond-paper extension for the accelerator plane: a *three-term* factor
+over (FLOPs, HBM, interconnect) with weights taken from the workload's
+roofline shares (derived from the compiled dry-run) — TPUs expose no
+userspace DVFS, and the roofline decomposition carries strictly more
+information than the paper's single frequency probe (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .profiler import BenchResult
+
+
+def deviation(t_new: float, t_old: float) -> float:
+    return (t_new - t_old) / t_old
+
+
+def cpu_weight(median_dev: float, freq_old: float, freq_new: float) -> float:
+    """Paper eq. 5.  freq_old/freq_new > 1 (CPU was slowed down)."""
+    denom = freq_old / freq_new - 1.0
+    if denom <= 0:
+        return 0.0
+    return float(np.clip(median_dev / denom, 0.0, 1.0))
+
+
+def runtime_factor(w: float, local: BenchResult, target: BenchResult) -> float:
+    """Paper eq. 6 — CPU/I-O two-term factor."""
+    cpu = local.cpu_events_s / max(target.cpu_events_s, 1e-9)
+    io = _io_score(local) / max(_io_score(target), 1e-9)
+    return w * cpu + (1.0 - w) * io
+
+
+def _io_score(b: BenchResult) -> float:
+    return 0.5 * (b.io_read_mbps + b.io_write_mbps)
+
+
+def roofline_weights(compute_s: float, memory_s: float,
+                     collective_s: float) -> tuple[float, float, float]:
+    """Normalised shares of the three roofline terms."""
+    tot = compute_s + memory_s + collective_s
+    if tot <= 0:
+        return (1.0, 0.0, 0.0)
+    return (compute_s / tot, memory_s / tot, collective_s / tot)
+
+
+def runtime_factor3(weights: tuple[float, float, float],
+                    local: BenchResult, target: BenchResult) -> float:
+    """Three-term factor: FLOPs / HBM / interconnect (beyond paper)."""
+    wc, wm, wn = weights
+    fc = local.matmul_gflops / max(target.matmul_gflops, 1e-9)
+    fm = local.mem_gbps / max(target.mem_gbps, 1e-9)
+    ln_local = local.link_gbps if local.link_gbps > 0 else local.mem_gbps / 10
+    ln_tgt = target.link_gbps if target.link_gbps > 0 else target.mem_gbps / 10
+    fn = ln_local / max(ln_tgt, 1e-9)
+    return wc * fc + wm * fm + wn * fn

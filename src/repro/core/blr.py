@@ -1,0 +1,154 @@
+"""Bayesian linear regression (the paper's §3.3 predictor), in JAX.
+
+Conjugate Normal–Inverse-Gamma model:
+
+    y_i = x_i^T b + eps_i,   eps_i ~ N(0, sigma^2)
+    b | sigma^2 ~ N(mu0, sigma^2 V0),   sigma^2 ~ InvGamma(a0, b0)
+
+with a Gaussian (L2 / ridge) prior on the weights, exactly as in the paper
+("we decided to set the prior to a Gaussian distribution, which results in
+an L2-regressor for our Bayesian regression").  The posterior predictive at
+x* is a Student-t: mean x*^T mu_n, scale^2 = b_n/a_n (1 + x*^T V_n x*),
+2 a_n degrees of freedom — this is where Lotaru's uncertainty estimates
+come from.
+
+Features are 1D (uncompressed input size / token count) plus an intercept;
+everything is closed-form, tiny, and jit-able.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class BLRPosterior:
+    mu: jnp.ndarray          # (d,) posterior mean of weights
+    V: jnp.ndarray           # (d, d) posterior covariance factor
+    a: jnp.ndarray           # shape of InvGamma
+    b: jnp.ndarray           # scale of InvGamma
+    x_scale: jnp.ndarray     # feature normalisation
+    y_scale: jnp.ndarray
+
+    @property
+    def dof(self):
+        return 2.0 * self.a
+
+    @property
+    def sigma2_mean(self):
+        return self.b / jnp.maximum(self.a - 1.0, 1e-6)
+
+
+def _design(x: jnp.ndarray, x_scale) -> jnp.ndarray:
+    x = jnp.atleast_1d(x) / x_scale
+    return jnp.stack([jnp.ones_like(x), x], axis=-1)
+
+
+def fit(x: jnp.ndarray, y: jnp.ndarray, *, prior_scale: float = 10.0,
+        a0: float = 1.0, b0: float = 1.0) -> BLRPosterior:
+    """Fit runtime ~ input_size.  x, y: (n,) fp arrays (n may be tiny)."""
+    x = jnp.asarray(x, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+    y = jnp.asarray(y, x.dtype)
+    x_scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    y_scale = jnp.maximum(jnp.max(jnp.abs(y)), 1e-12)
+    X = _design(x, x_scale)                      # (n, 2)
+    yn = y / y_scale
+    n, d = X.shape
+    V0_inv = jnp.eye(d) / (prior_scale ** 2)
+    mu0 = jnp.zeros(d)
+    Vn_inv = V0_inv + X.T @ X
+    Vn = jnp.linalg.inv(Vn_inv)
+    mun = Vn @ (V0_inv @ mu0 + X.T @ yn)
+    an = a0 + n / 2.0
+    resid = yn - X @ mun
+    bn = b0 + 0.5 * (resid @ yn + (mu0 - mun) @ (V0_inv @ mu0))
+    bn = jnp.maximum(bn, 1e-12)
+    return BLRPosterior(mu=mun, V=Vn, a=jnp.asarray(an), b=bn,
+                        x_scale=x_scale, y_scale=y_scale)
+
+
+def predict(post: BLRPosterior, x_star) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Posterior predictive mean and standard deviation at x_star."""
+    Xs = _design(jnp.asarray(x_star, jnp.float32), post.x_scale)
+    mean = Xs @ post.mu
+    s2 = (post.b / post.a) * (1.0 + jnp.einsum("...i,ij,...j->...", Xs, post.V, Xs))
+    dof = post.dof
+    var = s2 * dof / jnp.maximum(dof - 2.0, 1e-6)   # Student-t variance
+    mean = mean * post.y_scale
+    std = jnp.sqrt(jnp.maximum(var, 0.0)) * post.y_scale
+    if jnp.ndim(x_star) == 0:
+        return mean.reshape(())[()], std.reshape(-1)[0]
+    return mean, std
+
+
+def predict_interval(post: BLRPosterior, x_star, confidence: float = 0.5):
+    """Equal-tailed predictive interval via the Student-t quantile."""
+    from scipy import stats
+    mean, _ = predict(post, x_star)
+    Xs = _design(jnp.asarray(x_star, jnp.float32), post.x_scale)
+    scale = jnp.sqrt((post.b / post.a)
+                     * (1.0 + jnp.einsum("...i,ij,...j->...", Xs, post.V, Xs)))
+    tq = stats.t.ppf(0.5 + confidence / 2.0, df=float(post.dof))
+    half = tq * scale * post.y_scale
+    lo, hi = mean - half, mean + half
+    if np.ndim(x_star) == 0:
+        return (np.float64(np.asarray(lo).reshape(-1)[0]),
+                np.float64(np.asarray(hi).reshape(-1)[0]))
+    return lo, hi
+
+
+def pearson(x, y) -> float:
+    """Pearson correlation coefficient (paper eq. 1)."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    xd = x - x.mean()
+    yd = y - y.mean()
+    denom = np.sqrt((xd ** 2).sum() * (yd ** 2).sum())
+    if denom == 0:
+        return 0.0
+    return float((xd * yd).sum() / denom)
+
+
+CORRELATION_THRESHOLD = 0.8   # paper: "significant if p greater than 0.8"
+
+
+@dataclass(frozen=True)
+class TaskModel:
+    """Per-task predictor: BLR when size-runtime correlation is significant,
+    median fallback otherwise (paper §3.3)."""
+    correlated: bool
+    post: BLRPosterior | None
+    median: float
+    spread: float               # robust std (MAD) for the median fallback
+
+    def predict(self, x_star):
+        if self.correlated:
+            mean, std = predict(self.post, x_star)
+            mean = np.maximum(np.asarray(mean, np.float64), 0.0)
+            std = np.asarray(std, np.float64)
+            if np.ndim(x_star) == 0:
+                return np.float64(mean.reshape(-1)[0]), np.float64(std.reshape(-1)[0])
+            return mean, std
+        x = np.asarray(x_star, np.float64)
+        shape = x.shape if x.ndim else ()
+        return (np.full(shape, self.median) if shape else np.float64(self.median),
+                np.full(shape, self.spread) if shape else np.float64(self.spread))
+
+
+def fit_task(sizes, runtimes, *, threshold: float = CORRELATION_THRESHOLD) -> TaskModel:
+    sizes = np.asarray(sizes, np.float64)
+    runtimes = np.asarray(runtimes, np.float64)
+    p = pearson(sizes, runtimes)
+    if p > threshold and len(sizes) >= 2:
+        post = fit(jnp.asarray(sizes), jnp.asarray(runtimes))
+        return TaskModel(correlated=True, post=post,
+                         median=float(np.median(runtimes)),
+                         spread=float(1.4826 * np.median(
+                             np.abs(runtimes - np.median(runtimes))) + 1e-12))
+    return TaskModel(correlated=False, post=None,
+                     median=float(np.median(runtimes)),
+                     spread=float(1.4826 * np.median(
+                         np.abs(runtimes - np.median(runtimes))) + 1e-12))

@@ -1,0 +1,56 @@
+"""Deterministic synthetic LM data pipeline.
+
+Batches are a pure function of (seed, step): restart-safe (a restored run
+at step N sees exactly the token stream an uninterrupted run would have),
+host-shardable (each host materialises only its batch rows — the
+``host_slice`` arguments model per-host sharding even though this container
+is single-process), and family-aware (vision/audio stubs for the VLM and
+enc-dec archs).
+
+The "dataset downsampling" used by Lotaru's local phase is just a smaller
+(seq, batch) request — token streams have no file-format coupling.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig
+
+
+@dataclass(frozen=True)
+class SyntheticLMData:
+    cfg: ModelConfig
+    seq: int
+    global_batch: int
+    seed: int = 0
+
+    def batch(self, step: int, host_index: int = 0, host_count: int = 1) -> dict:
+        b = self.global_batch // host_count
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, host_index]))
+        tokens = rng.integers(0, self.cfg.vocab, (b, self.seq),
+                              dtype=np.int32)
+        # next-token labels over a repeating-pattern stream: learnable signal
+        pattern = (np.arange(self.seq, dtype=np.int32)[None, :]
+                   + rng.integers(0, 97, (b, 1), dtype=np.int32)) % 97
+        tokens = (tokens % 7) * 97 // 7 + pattern % 7  # mixture, in-vocab
+        tokens = tokens.astype(np.int32) % self.cfg.vocab
+        labels = np.roll(tokens, -1, axis=1)
+        out = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+        if self.cfg.family == "vlm":
+            nv = max(2, self.seq // 8)
+            out["vision_embeds"] = jnp.asarray(
+                rng.normal(0, 0.1, (b, nv, self.cfg.d_model)), jnp.bfloat16)
+            T = self.seq + nv
+            pos = np.broadcast_to(np.arange(T, dtype=np.int32)[None, :, None],
+                                  (b, T, 3))
+            out["positions"] = jnp.asarray(pos)
+        if self.cfg.family == "encdec":
+            out["src_embeds"] = jnp.asarray(
+                rng.normal(0, 0.1, (b, self.seq, self.cfg.d_model)),
+                jnp.float32)
+        return out

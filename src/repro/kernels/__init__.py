@@ -1,0 +1,5 @@
+"""TPU hot-spot kernels (Pallas): blocked flash attention + Mamba-2 SSD.
+Validated in interpret mode against pure-jnp oracles (ref.py)."""
+from . import flash_attention, ssd
+
+__all__ = ["flash_attention", "ssd"]

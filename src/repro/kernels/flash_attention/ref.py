@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash attention (fp32 throughout)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  kv_len: int | None = None) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D). Materialises full scores."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    kv_len = Sk if kv_len is None else kv_len
+    valid = jnp.arange(Sk)[None, :] < kv_len
+    if causal:
+        valid = valid & (jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None])
+    s = jnp.where(valid[None, None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p * valid[None, None]
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(denom == 0, 1.0, denom)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

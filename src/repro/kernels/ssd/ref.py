@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the SSD scan: the naive O(T) recurrence.
+
+    state_t = exp(dt_t * a) * state_{t-1} + dt_t * B_t (outer) x_t
+    y_t     = C_t . state_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, B_, C_):
+    """Shapes as kernel.ssd_scan. Returns (B, T, H, P) fp32."""
+    Bb, T, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bh = jnp.repeat(B_.astype(jnp.float32), rep, axis=2)   # (B, T, H, N)
+    Ch = jnp.repeat(C_.astype(jnp.float32), rep, axis=2)
+
+    def step(state, t):
+        decay = jnp.exp(dtf[:, t] * a[None, :])            # (B, H)
+        inp = jnp.einsum("bhn,bhp->bhpn", Bh[:, t],
+                         xf[:, t] * dtf[:, t][..., None])
+        state = state * decay[..., None, None] + inp
+        y = jnp.einsum("bhn,bhpn->bhp", Ch[:, t], state)
+        return state, y
+
+    state0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, jnp.arange(T))
+    return jnp.moveaxis(ys, 0, 1)                          # (B, T, H, P)

@@ -1,0 +1,128 @@
+"""Assigned input-shape cells and abstract input specs.
+
+Every (arch x shape) cell is defined here: train/prefill cells lower
+``train_step``/``prefill_step`` over the full sequence; decode cells lower
+``decode_step`` (one new token against a KV cache of ``seq`` tokens).
+``long_500k`` requires sub-quadratic attention and is skipped for pure
+full-attention archs (recorded as a skip, see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import ModelConfig
+from repro.models.common import AxisRules
+
+VLM_VISION_TOKENS = 1024     # patch-embedding stub length inside the seq budget
+AUDIO_FRAME_RATIO = 1.0      # encoder frames per "seq_len" unit (stub frontend)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, "long_500k skipped: pure full-attention arch (DESIGN.md §6)"
+    return True, ""
+
+
+def _dp_batch_spec(rules: AxisRules, global_batch: int, mesh) -> P:
+    """Shard batch over dp axes when divisible, else replicate."""
+    dp = 1
+    for a in rules.dp_axes:
+        dp *= mesh.shape[a]
+    if dp > 1 and global_batch % dp == 0:
+        axes = rules.dp_axes if len(rules.dp_axes) > 1 else rules.dp_axes[0]
+        return P(axes)
+    return P(None)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, rules: AxisRules) -> dict:
+    """ShapeDtypeStruct stand-ins for the step function's *batch* argument."""
+    B, T = shape.global_batch, shape.seq
+    bspec = _dp_batch_spec(rules, B, mesh)
+    b_axes = bspec[0] if len(bspec) else None
+
+    def sds(shp, dtype, spec):
+        return jax.ShapeDtypeStruct(shp, dtype, sharding=NamedSharding(mesh, spec))
+
+    if shape.kind == "decode":
+        batch = {"tokens": sds((B, 1), jnp.int32, P(b_axes, None))}
+        if cfg.family == "vlm" and cfg.mrope:
+            batch["positions"] = sds((B, 1, 3), jnp.int32, P(b_axes, None, None))
+        return batch
+
+    if cfg.family == "encdec":
+        batch = {
+            "src_embeds": sds((B, T, cfg.d_model), jnp.bfloat16, P(b_axes, None, None)),
+            "tokens": sds((B, T), jnp.int32, P(b_axes, None)),
+        }
+        if shape.kind == "train":
+            batch["labels"] = sds((B, T), jnp.int32, P(b_axes, None))
+        return batch
+
+    if cfg.family == "vlm":
+        nv = min(VLM_VISION_TOKENS, T // 4)
+        batch = {
+            "tokens": sds((B, T - nv), jnp.int32, P(b_axes, None)),
+            "vision_embeds": sds((B, nv, cfg.d_model), jnp.bfloat16,
+                                 P(b_axes, None, None)),
+            "positions": sds((B, T, 3), jnp.int32, P(b_axes, None, None)),
+        }
+        if shape.kind == "train":
+            batch["labels"] = sds((B, T - nv), jnp.int32, P(b_axes, None))
+        return batch
+
+    batch = {"tokens": sds((B, T), jnp.int32, P(b_axes, None))}
+    if shape.kind == "train":
+        batch["labels"] = sds((B, T), jnp.int32, P(b_axes, None))
+    return batch
+
+
+def concrete_batch(cfg: ModelConfig, kind: str, B: int, T: int, key=None) -> dict:
+    """Small concrete batch for smoke tests / examples (mirrors input_specs)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if kind == "decode":
+        batch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+        if cfg.family == "vlm" and cfg.mrope:
+            batch["positions"] = jnp.zeros((B, 1, 3), jnp.int32)
+        return batch
+    tokens = jax.random.randint(key, (B, T), 0, cfg.vocab)
+    if cfg.family == "encdec":
+        batch = {"src_embeds": 0.1 * jax.random.normal(key, (B, T, cfg.d_model)),
+                 "tokens": tokens}
+        if kind == "train":
+            batch["labels"] = tokens
+        return batch
+    if cfg.family == "vlm":
+        nv = max(2, T // 4)
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None, :, None], (B, T, 3))
+        batch = {"tokens": tokens[:, :T - nv],
+                 "vision_embeds": 0.1 * jnp.ones((B, nv, cfg.d_model), jnp.bfloat16),
+                 "positions": pos}
+        if kind == "train":
+            batch["labels"] = tokens[:, :T - nv]
+        return batch
+    batch = {"tokens": tokens}
+    if kind == "train":
+        batch["labels"] = tokens
+    return batch

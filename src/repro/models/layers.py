@@ -1,0 +1,290 @@
+"""Core layers: norms, RoPE / M-RoPE, GQA chunked (flash-style) attention, MLPs.
+
+Attention never materialises a (Tq, Tk) score tensor: it scans over KV
+blocks with a running-softmax accumulator (the XLA-path twin of
+``repro.kernels.flash_attention``), so 32k prefill compiles and fits on a
+16 GB/chip mesh.  All reductions accumulate in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import ModelConfig, ParamDef
+
+NEG_INF = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_def(dim: int) -> dict:
+    return {"scale": ParamDef((dim,), ("embed_noshard",), init="ones")}
+
+
+def layernorm_def(dim: int) -> dict:
+    return {"scale": ParamDef((dim,), ("embed_noshard",), init="ones"),
+            "bias": ParamDef((dim,), ("embed_noshard",), init="zeros")}
+
+
+def apply_norm(params: dict, x: jnp.ndarray, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+def _rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, T, H, D); positions: (B, T) int32."""
+    freqs = _rope_freqs(x.shape[-1], theta)
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (B, T, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: tuple[int, ...] | None = None) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE. positions3: (B, T, 3) [temporal, h, w]."""
+    half = x.shape[-1] // 2
+    if sections is None:
+        # qwen2-vl ratio (16, 24, 24) generalised to any head_dim
+        a = half // 4
+        b = (half - a) // 2
+        sections = (a, b, half - a - b)
+    assert sum(sections) == half, (sections, half)
+    freqs = _rope_freqs(x.shape[-1], theta)                      # (half,)
+    comp = jnp.concatenate([jnp.full((s,), i, dtype=jnp.int32)
+                            for i, s in enumerate(sections)])    # (half,)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(comp[None, None, :], positions3.shape[:2] + (half,)),
+        axis=-1)                                                 # (B, T, half)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA chunked flash-style attention (XLA path)
+# ---------------------------------------------------------------------------
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool, chunk: int, q_offset=0,
+                      kv_len: jnp.ndarray | None = None) -> jnp.ndarray:
+    """q: (B, Tq, Hq, D); k, v: (B, Tk, Hkv, D) with Hq % Hkv == 0.
+
+    ``q_offset``: absolute position of q[:, 0] (decode: cache length so far).
+    ``kv_len``: optional scalar/(B,) valid KV length (padded caches).
+    Returns (B, Tq, Hq, D) in q.dtype; softmax/accumulation in fp32.
+    """
+    B, Tq, Hq, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Tq, Hkv, G, D)
+    scale = 1.0 / math.sqrt(D)
+
+    chunk = min(chunk, Tk)
+    n_chunks = -(-Tk // chunk)
+    pad = n_chunks * chunk - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # (n_chunks, B, C, Hkv, D)
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, chunk, Hkv, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, chunk, Hkv, D), 1, 0)
+    starts = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
+
+    q_pos = (jnp.asarray(q_offset, jnp.int32)[..., None]
+             if jnp.ndim(q_offset) else jnp.asarray(q_offset, jnp.int32))
+    q_pos = q_pos + jnp.arange(Tq, dtype=jnp.int32)              # (Tq,) or (B,Tq)
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None], (B, Tq))
+
+    limit = jnp.asarray(Tk if kv_len is None else kv_len, jnp.int32)
+    limit = jnp.broadcast_to(jnp.atleast_1d(limit), (B,))        # (B,)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, start = xs
+        # bf16 inputs, fp32 accumulation: MXU-native mixed precision
+        s = jnp.einsum("bthgd,bchd->bthgc", qg, kb,
+                       preferred_element_type=jnp.float32) * scale  # (B,Tq,Hkv,G,C)
+        k_pos = start + jnp.arange(chunk, dtype=jnp.int32)       # (C,)
+        valid = k_pos[None, None, :] < limit[:, None, None]      # (B,1,C)
+        if causal:
+            valid = valid & (k_pos[None, None, :] <= q_pos[:, :, None])
+        valid = valid[:, :, None, None, :]                       # (B,Tq,1,1,C)
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bthgc,bchd->bthgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Tq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Tq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Tq, Hkv, G, D), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kc, vc, starts))
+    out = acc / jnp.where(l == 0.0, 1.0, l)[..., None]
+    return out.reshape(B, Tq, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+def attention_def(cfg: ModelConfig) -> dict:
+    hd = cfg.resolved_head_dim()
+    d = {
+        "wq": ParamDef((cfg.d_model, cfg.n_heads, hd), ("embed", "heads", "head_dim"), dtype=cfg.param_dtype),
+        "wk": ParamDef((cfg.d_model, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"), dtype=cfg.param_dtype),
+        "wv": ParamDef((cfg.d_model, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"), dtype=cfg.param_dtype),
+        "wo": ParamDef((cfg.n_heads, hd, cfg.d_model), ("heads", "head_dim", "embed"), dtype=cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = ParamDef((cfg.n_heads, hd), ("heads", "head_dim"), init="zeros", dtype=cfg.param_dtype)
+        d["bk"] = ParamDef((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"), init="zeros", dtype=cfg.param_dtype)
+        d["bv"] = ParamDef((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"), init="zeros", dtype=cfg.param_dtype)
+    return d
+
+
+def attention_qkv(params: dict, x: jnp.ndarray, cfg: ModelConfig):
+    dt = cfg.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    return q, k, v
+
+
+def attention_out(params: dict, o: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.einsum("bthk,hkd->btd", o, params["wo"].astype(cfg.dtype))
+
+
+def self_attention(params: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                   causal: bool, positions: jnp.ndarray,
+                   cache: dict | None = None, cache_index=None,
+                   rules=None):
+    """Full self-attention block.
+
+    ``cache``: {"k": (B, Tmax, Hkv, D), "v": ...} — when given with
+    ``cache_index`` (scalar int32: tokens already in cache), the new K/V are
+    written at that offset and attention runs over the whole (masked) cache.
+    Returns (out, new_cache).
+    """
+    q, k, v = attention_qkv(params, x, cfg)
+    if rules is not None:
+        # Pin the attention layout so GSPMD does one resharding at entry
+        # instead of per-KV-chunk collectives.  Two regimes:
+        #  * heads divide TP: heads sharded, seq full (Megatron-TP);
+        #  * heads don't divide TP (e.g. 28 heads @ tp16): shard the QUERY
+        #    sequence instead and replicate the (small, GQA) K/V — a
+        #    Megatron-SP/context-parallel layout with KV-only gathers.
+        from .common import logical_constraint
+        heads_spec = rules.resolve("batch", None, "act_heads", None,
+                                   dims=q.shape)
+        if len(heads_spec) > 2 and heads_spec[2] is not None:
+            q = logical_constraint(q, rules, "batch", None, "act_heads", None)
+            k = logical_constraint(k, rules, "batch", None, "act_kv_heads", None)
+            v = logical_constraint(v, rules, "batch", None, "act_kv_heads", None)
+        elif q.shape[1] > 1:
+            q = logical_constraint(q, rules, "batch", "act_seq", None, None)
+            k = logical_constraint(k, rules, "batch", None, None, None)
+            v = logical_constraint(v, rules, "batch", None, None, None)
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+        q_pos_1d = positions[..., 0]
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        q_pos_1d = positions
+    new_cache = None
+    if cache is not None:
+        ck = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        kv_len = cache_index + x.shape[1]
+        out = chunked_attention(q, ck.astype(cfg.dtype), cv.astype(cfg.dtype),
+                                causal=causal, chunk=cfg.attn_chunk,
+                                q_offset=q_pos_1d[:, 0], kv_len=kv_len)
+    else:
+        out = chunked_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk,
+                                q_offset=0)
+    return attention_out(params, out, cfg), new_cache
+
+
+def cross_attention_def(cfg: ModelConfig) -> dict:
+    return attention_def(cfg.with_(qkv_bias=False))
+
+
+def cross_attention(params: dict, x: jnp.ndarray, kv_src: jnp.ndarray,
+                    cfg: ModelConfig, kv_cache: dict | None = None):
+    """Decoder cross-attention. kv_src: encoder output (B, Ts, d).
+
+    With ``kv_cache`` given ({"k","v"} precomputed), kv_src is ignored.
+    """
+    dt = cfg.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+    if kv_cache is None:
+        k = jnp.einsum("btd,dhk->bthk", kv_src, params["wk"].astype(dt))
+        v = jnp.einsum("btd,dhk->bthk", kv_src, params["wv"].astype(dt))
+        kv_cache = {"k": k, "v": v}
+    out = chunked_attention(q, kv_cache["k"].astype(dt), kv_cache["v"].astype(dt),
+                            causal=False, chunk=cfg.attn_chunk)
+    return attention_out(params, out, cfg), kv_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def mlp_def(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    f = d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {"wg": ParamDef((cfg.d_model, f), ("embed", "mlp"), dtype=cfg.param_dtype),
+                "wu": ParamDef((cfg.d_model, f), ("embed", "mlp"), dtype=cfg.param_dtype),
+                "wd": ParamDef((f, cfg.d_model), ("mlp", "embed"), dtype=cfg.param_dtype)}
+    return {"w1": ParamDef((cfg.d_model, f), ("embed", "mlp"), dtype=cfg.param_dtype),
+            "b1": ParamDef((f,), ("mlp",), init="zeros", dtype=cfg.param_dtype),
+            "w2": ParamDef((f, cfg.d_model), ("mlp", "embed"), dtype=cfg.param_dtype),
+            "b2": ParamDef((cfg.d_model,), ("embed_noshard",), init="zeros", dtype=cfg.param_dtype)}
+
+
+def apply_mlp(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt = cfg.dtype
+    if cfg.act == "swiglu":
+        g = jnp.einsum("btd,df->btf", x, params["wg"].astype(dt))
+        u = jnp.einsum("btd,df->btf", x, params["wu"].astype(dt))
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("btf,fd->btd", h, params["wd"].astype(dt))
+    h = jnp.einsum("btd,df->btf", x, params["w1"].astype(dt)) + params["b1"].astype(dt)
+    h = jax.nn.gelu(h)
+    return jnp.einsum("btf,fd->btd", h, params["w2"].astype(dt)) + params["b2"].astype(dt)

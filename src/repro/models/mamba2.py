@@ -1,0 +1,210 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk the
+quadratic "attention-like" form runs on the MXU; across chunks a linear
+recurrence carries the (H, P, N) state.  We scan over chunks so the
+(L, L, H) intra-chunk score tensor exists for one chunk at a time.
+
+Decode is the O(1) recurrent update with a rolling depthwise-conv buffer.
+This is the XLA-path twin of ``repro.kernels.ssd``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import ModelConfig, ParamDef
+
+
+def mamba2_def(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H = s.n_ssm_heads(d)
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    proj_out = 2 * di + 2 * s.n_groups * s.d_state + H   # z, x, B, C, dt
+    return {
+        "in_proj": ParamDef((d, proj_out), ("embed", "ssm_inner"), dtype=cfg.param_dtype),
+        "conv_w": ParamDef((s.d_conv, conv_ch), (None, "conv_dim"), scale=0.5, dtype=cfg.param_dtype),
+        "conv_b": ParamDef((conv_ch,), ("conv_dim",), init="zeros", dtype=cfg.param_dtype),
+        "A_log": ParamDef((H,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "D": ParamDef((H,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "norm_w": ParamDef((di,), ("ssm_inner",), init="ones", dtype=cfg.param_dtype),
+        "out_proj": ParamDef((di, d), ("ssm_inner", "embed"), dtype=cfg.param_dtype),
+    }
+
+
+def _split_proj(proj: jnp.ndarray, cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    gn = s.n_groups * s.d_state
+    H = s.n_ssm_heads(cfg.d_model)
+    z, xc, B_, C_, dt = jnp.split(proj, [di, 2 * di, 2 * di + gn, 2 * di + 2 * gn], axis=-1)
+    return z, xc, B_, C_, dt
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B, T, C); w: (k, C)."""
+    k, C = w.shape
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = lax.conv_general_dilated(
+        xp, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=C)
+    return out + b.astype(x.dtype)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                B_: jnp.ndarray, C_: jnp.ndarray, chunk: int,
+                state0: jnp.ndarray | None = None):
+    """SSD scan.  x: (B, T, H, P); dt: (B, T, H); a: (H,) negative reals;
+    B_, C_: (B, T, G, N).  Returns (y: (B, T, H, P), final_state: (B,H,P,N)).
+    """
+    Bb, T, H, Pd = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    L = min(chunk, T)
+    n_chunks = -(-T // L)
+    pad = n_chunks * L - T
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))   # dt=0 -> identity decay, no input
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    rep = H // G
+
+    def to_chunks(t):  # (B, T, ...) -> (nc, B, L, ...)
+        return jnp.moveaxis(t.reshape((Bb, n_chunks, L) + t.shape[2:]), 1, 0)
+
+    xs = (to_chunks(x), to_chunks(dt), to_chunks(B_), to_chunks(C_))
+    f32 = jnp.float32
+
+    def body(state, xs_c):
+        xc, dtc, Bc, Cc = xs_c
+        xc, dtc = xc.astype(f32), dtc.astype(f32)
+        Bc, Cc = Bc.astype(f32), Cc.astype(f32)
+        da = dtc * a                                       # (B, L, H)
+        css = jnp.cumsum(da, axis=1)                       # inclusive
+        seg_end = css[:, -1, :]                            # (B, H)
+        # head -> group mapping by repetition
+        Bh = jnp.repeat(Bc, rep, axis=2)                   # (B, L, H, N)
+        Ch = jnp.repeat(Cc, rep, axis=2)
+        # ---- inter-chunk: contribution of carried state --------------------
+        y_inter = jnp.einsum("blhn,bhpn->blhp", Ch * jnp.exp(css)[..., None], state)
+        # ---- intra-chunk quadratic form ------------------------------------
+        scores = jnp.einsum("blhn,bmhn->blmh", Ch, Bh)     # (B, L, L, H)
+        decay = jnp.exp(css[:, :, None, :] - css[:, None, :, :])  # l,m
+        mask = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+        att = jnp.where(mask, scores * decay, 0.0) * dtc[:, None, :, :]
+        y_intra = jnp.einsum("blmh,bmhp->blhp", att, xc)
+        # ---- state update ---------------------------------------------------
+        sdecay = jnp.exp(seg_end[:, None, :] - css)        # (B, L, H): decay to chunk end
+        chunk_state = jnp.einsum("blhn,blhp->bhpn", Bh * sdecay[..., None],
+                                 xc * dtc[..., None])
+        state_new = state * jnp.exp(seg_end)[..., None, None] + chunk_state
+        return state_new, y_inter + y_intra
+
+    state0 = (jnp.zeros((Bb, H, Pd, N), f32) if state0 is None
+              else state0.astype(f32))
+    final_state, ys = lax.scan(body, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, n_chunks * L, H, Pd)
+    if pad:
+        y = y[:, :T]
+    return y, final_state
+
+
+def _gated_rmsnorm(y: jnp.ndarray, z: jnp.ndarray, w: jnp.ndarray,
+                   eps: float = 1e-6) -> jnp.ndarray:
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * lax.rsqrt(ms + eps) * w.astype(jnp.float32)).astype(y.dtype)
+
+
+def apply_mamba2(params: dict, u: jnp.ndarray, cfg: ModelConfig,
+                 cache: dict | None = None, cache_index=None):
+    """u: (B, T, d_model).  Train/prefill path (chunked SSD over T).
+
+    With ``cache`` ({"conv": (B, k-1, conv_ch), "state": (B,H,P,N)}) given,
+    the final conv window and SSD state are written back (prefill).
+    Returns (out, new_cache | None).
+    """
+    s = cfg.ssm
+    dt_ = cfg.dtype
+    di = s.d_inner(cfg.d_model)
+    H = s.n_ssm_heads(cfg.d_model)
+    Bb, T, _ = u.shape
+
+    proj = jnp.einsum("btd,dp->btp", u, params["in_proj"].astype(dt_))
+    z, xc, B_, C_, dtr = _split_proj(proj, cfg)
+    xBC = jnp.concatenate([xc, B_, C_], axis=-1)
+    if cache is not None:
+        # prepend cached conv window for seamless continuation
+        xBC_in = jnp.concatenate([cache["conv"].astype(dt_), xBC], axis=1)
+        conv_out = _causal_conv(xBC_in, params["conv_w"], params["conv_b"])[:, -T:]
+        new_conv = xBC_in[:, -(s.d_conv - 1):]
+    else:
+        conv_out = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+        new_conv = None
+    conv_out = jax.nn.silu(conv_out)
+    gn = s.n_groups * s.d_state
+    xc = conv_out[..., :di]
+    B_ = conv_out[..., di:di + gn].reshape(Bb, T, s.n_groups, s.d_state)
+    C_ = conv_out[..., di + gn:].reshape(Bb, T, s.n_groups, s.d_state)
+
+    dt_act = jax.nn.softplus(dtr.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])                              # (H,) negative
+    xh = xc.reshape(Bb, T, H, s.head_dim)
+    state0 = cache["state"] if cache is not None else None
+    y, state = ssd_chunked(xh, dt_act, a, B_, C_, s.chunk, state0=state0)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.astype(dt_).reshape(Bb, T, di)
+    y = _gated_rmsnorm(y, z, params["norm_w"])
+    out = jnp.einsum("bti,id->btd", y, params["out_proj"].astype(dt_))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "state": state.astype(cache["state"].dtype)}
+    return out, new_cache
+
+
+def decode_mamba2(params: dict, u: jnp.ndarray, cfg: ModelConfig, cache: dict):
+    """Single-token decode. u: (B, 1, d_model); O(1) state update."""
+    s = cfg.ssm
+    dt_ = cfg.dtype
+    di = s.d_inner(cfg.d_model)
+    H = s.n_ssm_heads(cfg.d_model)
+    Bb = u.shape[0]
+
+    proj = jnp.einsum("btd,dp->btp", u, params["in_proj"].astype(dt_))
+    z, xc, B_, C_, dtr = _split_proj(proj, cfg)
+    xBC = jnp.concatenate([xc, B_, C_], axis=-1)[:, 0]         # (B, conv_ch)
+    window = jnp.concatenate([cache["conv"].astype(dt_), xBC[:, None, :]], axis=1)
+    conv_out = (jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                           params["conv_w"].astype(jnp.float32))
+                + params["conv_b"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out)
+    gn = s.n_groups * s.d_state
+    xc1 = conv_out[:, :di]
+    B1 = conv_out[:, di:di + gn].reshape(Bb, s.n_groups, s.d_state)
+    C1 = conv_out[:, di + gn:].reshape(Bb, s.n_groups, s.d_state)
+    rep = H // s.n_groups
+    Bh = jnp.repeat(B1, rep, axis=1)                           # (B, H, N)
+    Ch = jnp.repeat(C1, rep, axis=1)
+
+    dt1 = jax.nn.softplus(dtr.astype(jnp.float32)[:, 0] + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt1 * a)                                   # (B, H)
+    xh = xc1.reshape(Bb, H, s.head_dim).astype(jnp.float32)
+    state = cache["state"].astype(jnp.float32)
+    state = (state * decay[..., None, None]
+             + jnp.einsum("bhn,bhp->bhpn", Bh, xh * dt1[..., None]))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, state)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(Bb, 1, di).astype(dt_)
+    y = _gated_rmsnorm(y, z, params["norm_w"])
+    out = jnp.einsum("bti,id->btd", y, params["out_proj"].astype(dt_))
+    new_cache = {"conv": window[:, 1:].astype(cache["conv"].dtype),
+                 "state": state.astype(cache["state"].dtype)}
+    return out, new_cache

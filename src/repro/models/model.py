@@ -1,0 +1,77 @@
+"""Model factory: ModelConfig -> uniform {init, loss, prefill, decode} API."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .common import (AxisRules, ModelConfig, tree_defs_init,
+                     tree_defs_to_abstract, tree_defs_to_specs)
+from . import encdec as _encdec
+from . import transformer as _tf
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    param_defs: Any
+
+    # ---- parameters -------------------------------------------------------
+    def init(self, key) -> Any:
+        return tree_defs_init(self.param_defs, key)
+
+    def param_specs(self, rules: AxisRules):
+        return tree_defs_to_specs(self.param_defs, rules)
+
+    def abstract_params(self, mesh, rules: AxisRules):
+        return tree_defs_to_abstract(self.param_defs, mesh, rules)
+
+    # ---- caches ------------------------------------------------------------
+    def cache_defs(self, batch: int, max_len: int, cross_len: int = 0,
+                   cache_dtype=jnp.bfloat16):
+        if self.cfg.family == "encdec":
+            return _encdec.encdec_cache_def(self.cfg, batch, max_len,
+                                            cross_len or max_len, cache_dtype)
+        return _tf.cache_def(self.cfg, batch, max_len, cache_dtype)
+
+    def init_caches(self, batch: int, max_len: int, cross_len: int = 0,
+                    cache_dtype=jnp.bfloat16):
+        defs = self.cache_defs(batch, max_len, cross_len, cache_dtype)
+        return tree_defs_init(defs, jax.random.PRNGKey(0))
+
+    def cache_specs(self, rules: AxisRules, batch: int, max_len: int,
+                    cross_len: int = 0, cache_dtype=jnp.bfloat16):
+        defs = self.cache_defs(batch, max_len, cross_len, cache_dtype)
+        return tree_defs_to_specs(defs, rules)
+
+    def abstract_caches(self, mesh, rules: AxisRules, batch: int, max_len: int,
+                        cross_len: int = 0, cache_dtype=jnp.bfloat16):
+        defs = self.cache_defs(batch, max_len, cross_len, cache_dtype)
+        return tree_defs_to_abstract(defs, mesh, rules)
+
+    # ---- compute -----------------------------------------------------------
+    def loss(self, params, batch: dict, rules: AxisRules):
+        if self.cfg.family == "encdec":
+            return _encdec.encdec_loss(params, self.cfg, batch, rules)
+        return _tf.lm_loss(params, self.cfg, batch, rules)
+
+    def prefill(self, params, batch: dict, caches, rules: AxisRules):
+        if self.cfg.family == "encdec":
+            return _encdec.encdec_prefill(params, self.cfg, batch, caches, rules)
+        return _tf.lm_prefill(params, self.cfg, batch, caches, rules)
+
+    def decode(self, params, batch: dict, caches, cache_index, rules: AxisRules):
+        if self.cfg.family == "encdec":
+            return _encdec.encdec_decode(params, self.cfg, batch, caches,
+                                         cache_index, rules)
+        return _tf.lm_decode(params, self.cfg, batch, caches, cache_index, rules)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        defs = _encdec.encdec_def(cfg)
+    else:
+        defs = _tf.lm_def(cfg)
+    return Model(cfg=cfg, param_defs=defs)

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts with capacity-based, group-local dispatch.
+
+GShard/Switch-style: tokens are viewed as (groups, S, d) with groups mapped
+to the data-parallel axes and experts to the "model" axis (expert
+parallelism).  Dispatch is *scatter/gather based* — we never materialise the
+(S, E, C) one-hot dispatch tensor (at 1M tokens × 128 experts that would be
+O(10^13) elements).  Capacity overflow tokens are dropped (standard
+capacity-factor semantics); the router returns an aux load-balancing loss.
+
+The data→expert resharding boundary of the (G, E, C, d) buffer is where the
+all-to-all appears in the lowered HLO.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import AxisRules, ModelConfig, ParamDef, logical_constraint
+from .layers import apply_mlp, mlp_def
+
+
+def moe_def(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d = {
+        "router": ParamDef((cfg.d_model, m.n_experts), ("embed", "experts"),
+                           scale=0.1, dtype=cfg.param_dtype),
+        "wg": ParamDef((m.n_experts, cfg.d_model, m.d_ff_expert),
+                       ("experts", "embed", "expert_mlp"), dtype=cfg.param_dtype),
+        "wu": ParamDef((m.n_experts, cfg.d_model, m.d_ff_expert),
+                       ("experts", "embed", "expert_mlp"), dtype=cfg.param_dtype),
+        "wd": ParamDef((m.n_experts, m.d_ff_expert, cfg.d_model),
+                       ("experts", "expert_mlp", "embed"), dtype=cfg.param_dtype),
+    }
+    if m.shared_expert:
+        d["shared"] = mlp_def(cfg, d_ff=m.d_ff_expert)
+    return d
+
+
+def _capacity(s_per_group: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(s_per_group * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, -(-c // 8) * 8)  # >=8, 8-aligned
+
+
+def apply_moe(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+              rules: AxisRules | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, T, d) -> (out, aux_loss)."""
+    rules = rules or AxisRules(fsdp_axes=(), dp_axes=())
+    m = cfg.moe
+    B, T, d = x.shape
+    n_tok = B * T
+    G = cfg.moe_groups or 1
+    if n_tok % G or (n_tok // G) < m.n_experts // m.top_k:
+        G = 1  # degenerate/smoke shapes: single group
+    S = n_tok // G
+    E, K = m.n_experts, m.top_k
+    C = _capacity(S, cfg)
+
+    xg = x.reshape(G, S, d)
+    xg = logical_constraint(xg, rules, "groups", None, None)
+
+    # --- router (fp32) ----------------------------------------------------
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G,S,E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)            # (G,S,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # aux load-balance loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1))                                           # (E,)
+    aux = E * jnp.sum(me * ce)
+
+    # --- dispatch slots: rank of each (s,k) within its expert -------------
+    flat_e = expert_idx.reshape(G, S * K)                      # token-major
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)            # (G, S*K, E)
+    pos_in_e = jnp.cumsum(oh, axis=1) - oh
+    slot = jnp.sum(pos_in_e * oh, axis=-1)                     # (G, S*K)
+    keep = slot < C
+    slot_c = jnp.minimum(slot, C - 1)
+
+    # --- scatter token *indices* into the (E, C) routing table -------------
+    s_of = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :, None],
+                            (G, S, K)).reshape(G, S * K)
+    sentinel = S                                               # maps to zero row
+    g_of = jnp.broadcast_to(jnp.arange(G)[:, None], (G, S * K))
+    buf_idx = jnp.full((G, E, C), sentinel, jnp.int32)
+    buf_idx = buf_idx.at[
+        g_of.reshape(-1),
+        jnp.where(keep, flat_e, 0).reshape(-1),
+        slot_c.reshape(-1),
+    ].set(jnp.where(keep, s_of, sentinel).reshape(-1), mode="drop")
+
+    # --- gather values into the dispatch buffer (G, E, C, d) ---------------
+    xg_pad = jnp.concatenate([xg, jnp.zeros((G, 1, d), xg.dtype)], axis=1)
+    dispatched = jnp.take_along_axis(
+        xg_pad, buf_idx.reshape(G, E * C)[..., None], axis=1)
+    dispatched = dispatched.reshape(G, E, C, d)
+    dispatched = logical_constraint(dispatched, rules, "groups", "experts", None, None)
+
+    # --- expert computation (EP over "model") ------------------------------
+    dt = cfg.dtype
+    g_h = jnp.einsum("gecd,edf->gecf", dispatched.astype(dt), params["wg"].astype(dt))
+    u_h = jnp.einsum("gecd,edf->gecf", dispatched.astype(dt), params["wu"].astype(dt))
+    h = jax.nn.silu(g_h) * u_h
+    y_buf = jnp.einsum("gecf,efd->gecd", h, params["wd"].astype(dt))
+    y_buf = logical_constraint(y_buf, rules, "groups", "experts", None, None)
+
+    # --- combine: gather each token's K expert outputs, weight by gates ----
+    flat_addr = jnp.where(keep, flat_e * C + slot_c, E * C)    # (G, S*K)
+    y_flat = y_buf.reshape(G, E * C, d)
+    y_flat = jnp.concatenate([y_flat, jnp.zeros((G, 1, d), y_flat.dtype)], axis=1)
+    gathered = jnp.take_along_axis(y_flat, flat_addr[..., None], axis=1)
+    gathered = gathered.reshape(G, S, K, d)
+    out = jnp.sum(gathered.astype(jnp.float32)
+                  * gate_vals[..., None].astype(jnp.float32), axis=2)
+    out = out.astype(x.dtype).reshape(B, T, d)
+
+    if m.shared_expert:
+        out = out + apply_mlp(params["shared"], x, cfg)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,429 @@
+"""Decoder-only LM assembly for all non-encdec families.
+
+Layers are scan-stacked (one-layer HLO, fast multi-pod compiles).  The MoE
+interleave pattern (llama4: MoE every 2nd layer) is handled by making the
+scan unit = ``moe.every`` consecutive layers, so stacked params stay
+homogeneous.  The zamba2 hybrid scans *super-units*: ``hybrid_attn_every``
+Mamba2 layers followed by one application of a single weight-tied shared
+attention block (per the Zamba2 design) — fully static, no ``lax.cond``
+(keeps the HLO attributable for roofline accounting).  Remainder layers
+(38 % 6 = 2) form a scanned tail without attention.
+
+Loss uses chunked cross-entropy: logits are only ever materialised for one
+token chunk at a time, with the vocab dim sharded over "model" — required
+for vocab 256k × 1M-token global batches.
+
+Activations between blocks are sequence-sharded over "model"
+(Megatron-SP style) when ``cfg.seq_shard`` — the single biggest HBM lever
+for the 16 GB/chip mesh (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import (AxisRules, ModelConfig, ParamDef, is_def,
+                     logical_constraint)
+from .layers import (apply_mlp, apply_norm, attention_def, mlp_def,
+                     rmsnorm_def, layernorm_def, self_attention)
+from .mamba2 import apply_mamba2, decode_mamba2, mamba2_def
+from .moe import apply_moe, moe_def
+
+AUX_LOSS_COEF = 0.01
+
+
+def norm_def(cfg: ModelConfig) -> dict:
+    return layernorm_def(cfg.d_model) if cfg.norm == "layernorm" else rmsnorm_def(cfg.d_model)
+
+
+def stack_defs(defs, n: int):
+    """Add a leading scan-stacked 'layers' dim to every ParamDef leaf."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.logical_axes,
+                           init=d.init, scale=d.scale, dtype=d.dtype),
+        defs, is_leaf=is_def)
+
+
+def _index_tree(tree, j: int):
+    return jax.tree.map(lambda x: x[j], tree)
+
+
+def _stack_tree(trees: list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------------------
+# Scan-unit definitions
+# ---------------------------------------------------------------------------
+def _dense_layer_def(cfg: ModelConfig) -> dict:
+    return {"ln1": norm_def(cfg), "attn": attention_def(cfg),
+            "ln2": norm_def(cfg), "mlp": mlp_def(cfg)}
+
+
+def _moe_layer_def(cfg: ModelConfig) -> dict:
+    return {"ln1": norm_def(cfg), "attn": attention_def(cfg),
+            "ln2": norm_def(cfg), "moe": moe_def(cfg)}
+
+
+def _ssm_layer_def(cfg: ModelConfig) -> dict:
+    return {"ln": norm_def(cfg), "mamba": mamba2_def(cfg)}
+
+
+def scan_unit_def(cfg: ModelConfig) -> dict:
+    if cfg.family in ("dense", "vlm"):
+        return _dense_layer_def(cfg)
+    if cfg.family == "moe":
+        unit = {"moe_layer": _moe_layer_def(cfg)}
+        for j in range(cfg.moe.every - 1):
+            unit[f"dense_{j}"] = _dense_layer_def(cfg)
+        return unit
+    if cfg.family == "ssm":
+        return _ssm_layer_def(cfg)
+    if cfg.family == "hybrid":
+        return {"ssm_layers": stack_defs(_ssm_layer_def(cfg), cfg.hybrid_attn_every)}
+    raise ValueError(cfg.family)
+
+
+def n_scan_units(cfg: ModelConfig) -> int:
+    if cfg.family == "moe":
+        assert cfg.n_layers % cfg.moe.every == 0
+        return cfg.n_layers // cfg.moe.every
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.hybrid_attn_every
+    return cfg.n_layers
+
+
+def hybrid_tail_layers(cfg: ModelConfig) -> int:
+    return cfg.n_layers % cfg.hybrid_attn_every if cfg.family == "hybrid" else 0
+
+
+def lm_def(cfg: ModelConfig) -> dict:
+    d: dict[str, Any] = {
+        "embed": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "embed"), dtype=cfg.param_dtype),
+        "blocks": stack_defs(scan_unit_def(cfg), n_scan_units(cfg)),
+        "ln_f": norm_def(cfg),
+    }
+    if not cfg.tie_embeddings:
+        d["unembed"] = ParamDef((cfg.d_model, cfg.vocab), ("embed", "vocab"), dtype=cfg.param_dtype)
+    if cfg.family == "hybrid":
+        d["shared_attn"] = {"ln1": norm_def(cfg), "attn": attention_def(cfg),
+                            "ln2": norm_def(cfg), "mlp": mlp_def(cfg)}
+        tail = hybrid_tail_layers(cfg)
+        if tail:
+            d["tail_blocks"] = stack_defs(_ssm_layer_def(cfg), tail)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Cache definitions (ParamDef so the dry-run can make abstract sharded caches)
+# ---------------------------------------------------------------------------
+def _kv_def(cfg: ModelConfig, batch: int, max_len: int, cache_dtype) -> dict:
+    hd = cfg.resolved_head_dim()
+    return {"k": ParamDef((batch, max_len, cfg.n_kv_heads, hd),
+                          ("batch", "kv_seq", "kv_heads", "head_dim"),
+                          init="zeros", dtype=cache_dtype),
+            "v": ParamDef((batch, max_len, cfg.n_kv_heads, hd),
+                          ("batch", "kv_seq", "kv_heads", "head_dim"),
+                          init="zeros", dtype=cache_dtype)}
+
+
+def _ssm_cache_def(cfg: ModelConfig, batch: int, cache_dtype) -> dict:
+    s = cfg.ssm
+    conv_ch = s.d_inner(cfg.d_model) + 2 * s.n_groups * s.d_state
+    H = s.n_ssm_heads(cfg.d_model)
+    return {"conv": ParamDef((batch, s.d_conv - 1, conv_ch),
+                             ("batch", None, "conv_dim"), init="zeros", dtype=cache_dtype),
+            "state": ParamDef((batch, H, s.head_dim, s.d_state),
+                              ("batch", "ssm_heads", None, None),
+                              init="zeros", dtype=jnp.float32)}
+
+
+def cache_def(cfg: ModelConfig, batch: int, max_len: int,
+              cache_dtype=jnp.bfloat16) -> dict:
+    if cfg.family in ("dense", "vlm"):
+        return {"blocks": stack_defs(_kv_def(cfg, batch, max_len, cache_dtype),
+                                     n_scan_units(cfg))}
+    if cfg.family == "moe":
+        unit = {"moe_layer": _kv_def(cfg, batch, max_len, cache_dtype)}
+        for j in range(cfg.moe.every - 1):
+            unit[f"dense_{j}"] = _kv_def(cfg, batch, max_len, cache_dtype)
+        return {"blocks": stack_defs(unit, n_scan_units(cfg))}
+    if cfg.family == "ssm":
+        return {"blocks": stack_defs(_ssm_cache_def(cfg, batch, cache_dtype),
+                                     cfg.n_layers)}
+    # hybrid
+    unit = {"ssm": stack_defs(_ssm_cache_def(cfg, batch, cache_dtype),
+                              cfg.hybrid_attn_every),
+            "attn": _kv_def(cfg, batch, max_len, cache_dtype)}
+    out = {"blocks": stack_defs(unit, n_scan_units(cfg))}
+    tail = hybrid_tail_layers(cfg)
+    if tail:
+        out["tail"] = stack_defs(_ssm_cache_def(cfg, batch, cache_dtype), tail)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+def _seq_constraint(h, cfg: ModelConfig, rules: AxisRules):
+    if cfg.seq_shard and h.shape[1] > 1:
+        return logical_constraint(h, rules, "batch", "act_seq", "act_embed")
+    return logical_constraint(h, rules, "batch", None, "act_embed")
+
+
+def _apply_dense_layer(p, h, cfg, rules, positions, cache=None, cache_index=None):
+    a, new_cache = self_attention(p["attn"], apply_norm(p["ln1"], h, cfg.norm),
+                                  cfg, causal=True, positions=positions,
+                                  cache=cache, cache_index=cache_index,
+                                  rules=rules)
+    h = h + a
+    h = h + apply_mlp(p["mlp"], apply_norm(p["ln2"], h, cfg.norm), cfg)
+    h = _seq_constraint(h, cfg, rules)
+    return h, new_cache
+
+
+def _apply_moe_layer(p, h, cfg, rules, positions, cache=None, cache_index=None):
+    a, new_cache = self_attention(p["attn"], apply_norm(p["ln1"], h, cfg.norm),
+                                  cfg, causal=True, positions=positions,
+                                  cache=cache, cache_index=cache_index,
+                                  rules=rules)
+    h = h + a
+    mo, aux = apply_moe(p["moe"], apply_norm(p["ln2"], h, cfg.norm), cfg, rules)
+    h = _seq_constraint(h + mo, cfg, rules)
+    return h, new_cache, aux
+
+
+def _apply_ssm_layer(p, h, cfg, rules, cache=None, cache_index=None,
+                     decode: bool = False):
+    x = apply_norm(p["ln"], h, cfg.norm)
+    if decode:
+        o, nc = decode_mamba2(p["mamba"], x, cfg, cache)
+    else:
+        o, nc = apply_mamba2(p["mamba"], x, cfg, cache=cache, cache_index=cache_index)
+    h = _seq_constraint(h + o, cfg, rules)
+    return h, nc
+
+
+def _apply_shared_attn(p, h, cfg, rules, positions, cache=None, cache_index=None):
+    a, new_cache = self_attention(p["attn"], apply_norm(p["ln1"], h, cfg.norm),
+                                  cfg, causal=True, positions=positions,
+                                  cache=cache, cache_index=cache_index,
+                                  rules=rules)
+    h = h + a
+    h = h + apply_mlp(p["mlp"], apply_norm(p["ln2"], h, cfg.norm), cfg)
+    h = _seq_constraint(h, cfg, rules)
+    return h, new_cache
+
+
+def _apply_unit(p, h, cfg, rules, positions, shared_attn=None, cache=None,
+                cache_index=None, decode: bool = False):
+    """One scan unit. Returns (h, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family in ("dense", "vlm"):
+        h, nc = _apply_dense_layer(p, h, cfg, rules, positions, cache, cache_index)
+        return h, nc, aux
+    if cfg.family == "moe":
+        new_cache = {}
+        for j in range(cfg.moe.every - 1):
+            key = f"dense_{j}"
+            h, nc = _apply_dense_layer(p[key], h, cfg, rules, positions,
+                                       cache[key] if cache else None, cache_index)
+            new_cache[key] = nc
+        h, nc, aux = _apply_moe_layer(p["moe_layer"], h, cfg, rules, positions,
+                                      cache["moe_layer"] if cache else None,
+                                      cache_index)
+        new_cache["moe_layer"] = nc
+        return h, (new_cache if cache else None), aux
+    if cfg.family == "ssm":
+        h, nc = _apply_ssm_layer(p, h, cfg, rules, cache, cache_index, decode)
+        return h, nc, aux
+    # hybrid super-unit: `every` mamba layers + one shared-attn application
+    new_ssm = []
+    for j in range(cfg.hybrid_attn_every):
+        pj = _index_tree(p["ssm_layers"], j)
+        cj = _index_tree(cache["ssm"], j) if cache is not None else None
+        h, ncj = _apply_ssm_layer(pj, h, cfg, rules, cj, cache_index, decode)
+        new_ssm.append(ncj)
+    h, nattn = _apply_shared_attn(shared_attn, h, cfg, rules, positions,
+                                  cache["attn"] if cache is not None else None,
+                                  cache_index)
+    if cache is not None:
+        return h, {"ssm": _stack_tree(new_ssm), "attn": nattn}, aux
+    return h, None, aux
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Trunk: embeddings + scanned blocks + final norm
+# ---------------------------------------------------------------------------
+def _positions_for(cfg: ModelConfig, batch: dict, B: int, T: int, offset=0):
+    if cfg.mrope:
+        pos = batch.get("positions")
+        if pos is None:
+            base = offset + jnp.arange(T, dtype=jnp.int32)
+            pos = jnp.broadcast_to(base[None, :, None], (B, T, 3))
+        return pos
+    base = offset + jnp.arange(T, dtype=jnp.int32)
+    return jnp.broadcast_to(base[None, :], (B, T))
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict, rules: AxisRules):
+    tokens = batch["tokens"]
+    # bf16 table copy laid out (vocab replicated, d over "model"): the
+    # gather then needs no collective at all (tokens stay batch-sharded,
+    # output is (batch/dp, T, d/tp)); the fsdp-sharded master layout would
+    # otherwise force a ~1GB fp32 activation reshard per step.
+    table = logical_constraint(params["embed"].astype(cfg.dtype), rules,
+                               None, "embed_gather")
+    h = jnp.take(table, tokens, axis=0)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        h = jnp.concatenate([batch["vision_embeds"].astype(cfg.dtype), h], axis=1)
+    return _seq_constraint(h, cfg, rules)
+
+
+def trunk(params, cfg: ModelConfig, batch: dict, rules: AxisRules,
+          caches: dict | None = None, cache_index=None, decode: bool = False):
+    """Embed + all blocks + final norm. Returns (h, new_caches, aux_total)."""
+    h = _embed_inputs(params, cfg, batch, rules)
+    B, T = h.shape[0], h.shape[1]
+    offset = cache_index if cache_index is not None else 0
+    positions = _positions_for(cfg, batch, B, T, offset)
+
+    def unit_fn(p, h, cache):
+        return _apply_unit(p, h, cfg, rules, positions,
+                           shared_attn=params.get("shared_attn"),
+                           cache=cache, cache_index=cache_index, decode=decode)
+
+    unit_fn_r = _remat(unit_fn, cfg) if caches is None else unit_fn
+    block_caches = caches["blocks"] if caches is not None else None
+
+    if block_caches is None:
+        def body(h, p_i):
+            h, _, aux = unit_fn_r(p_i, h, None)
+            return h, aux
+        h, auxs = lax.scan(body, h, params["blocks"])
+        new_caches = None
+    else:
+        def body(h, xs):
+            p_i, c_i = xs
+            h, nc, aux = unit_fn_r(p_i, h, c_i)
+            return h, (nc, aux)
+        h, (new_blocks, auxs) = lax.scan(body, h, (params["blocks"], block_caches))
+        new_caches = {"blocks": new_blocks}
+    aux_total = jnp.sum(auxs)
+
+    # hybrid tail (layers not covered by a full super-unit)
+    if cfg.family == "hybrid" and hybrid_tail_layers(cfg):
+        tail_caches = caches.get("tail") if caches is not None else None
+
+        def tail_fn(p_i, h, c_i):
+            return _apply_ssm_layer(p_i, h, cfg, rules, c_i, cache_index, decode)
+        tail_fn_r = _remat(tail_fn, cfg) if caches is None else tail_fn
+        if tail_caches is None:
+            def tbody(h, p_i):
+                h, _ = tail_fn_r(p_i, h, None)
+                return h, None
+            h, _ = lax.scan(tbody, h, params["tail_blocks"])
+        else:
+            def tbody(h, xs):
+                p_i, c_i = xs
+                h, nc = tail_fn_r(p_i, h, c_i)
+                return h, nc
+            h, new_tail = lax.scan(tbody, h, (params["tail_blocks"], tail_caches))
+            new_caches["tail"] = new_tail
+
+    h = apply_norm(params["ln_f"], h, cfg.norm)
+    return h, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy
+# ---------------------------------------------------------------------------
+def unembed_matrix(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def chunked_xent(h, w_out, labels, mask, cfg: ModelConfig, rules: AxisRules):
+    """h: (B, T, d) -> mean masked token xent (fp32).  Logits exist one
+    chunk at a time, vocab sharded over "model"."""
+    B, T, d = h.shape
+    C = min(cfg.xent_chunk, T)
+    n_chunks = -(-T // C)
+    pad = n_chunks * C - T
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    h = h.astype(cfg.dtype)   # gathers to vocab-parallel regions stay bf16
+    hc = jnp.moveaxis(h.reshape(B, n_chunks, C, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n_chunks, C), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(B, n_chunks, C), 1, 0)
+    w = w_out.astype(cfg.dtype)
+
+    def body(acc, xs):
+        hx, lx, mx = xs
+        logits = jnp.einsum("bcd,dv->bcv", hx.astype(cfg.dtype), w,
+                            preferred_element_type=jnp.float32)
+        logits = logical_constraint(logits, rules, "batch", None, "act_vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.sum(jax.nn.one_hot(lx, logits.shape[-1], dtype=jnp.float32)
+                     * logits, axis=-1)
+        loss = (lse - ll) * mx
+        return (acc[0] + jnp.sum(loss), acc[1] + jnp.sum(mx)), None
+
+    body = jax.checkpoint(body) if cfg.remat != "none" else body
+    (tot, cnt), _ = lax.scan(body, (jnp.zeros((), jnp.float32),
+                                    jnp.zeros((), jnp.float32)), (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Public model functions
+# ---------------------------------------------------------------------------
+def lm_loss(params, cfg: ModelConfig, batch: dict, rules: AxisRules):
+    h, _, aux = trunk(params, cfg, batch, rules)
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        # loss only over the text region (appended after vision tokens)
+        n_vis = batch["vision_embeds"].shape[1]
+        h = h[:, n_vis:]
+    loss = chunked_xent(h, unembed_matrix(params, cfg), labels,
+                        mask.astype(jnp.float32), cfg, rules)
+    return loss + AUX_LOSS_COEF * aux, {"xent": loss, "aux": aux}
+
+
+def lm_prefill(params, cfg: ModelConfig, batch: dict, caches, rules: AxisRules):
+    """Run the prompt through the trunk filling caches; returns last logits."""
+    h, new_caches, _ = trunk(params, cfg, batch, rules, caches=caches,
+                             cache_index=jnp.zeros((), jnp.int32))
+    last = h[:, -1:]
+    logits = jnp.einsum("btd,dv->btv", last.astype(cfg.dtype),
+                        unembed_matrix(params, cfg).astype(cfg.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits, new_caches
+
+
+def lm_decode(params, cfg: ModelConfig, batch: dict, caches, cache_index,
+              rules: AxisRules):
+    """One decode step: batch["tokens"]: (B, 1)."""
+    h, new_caches, _ = trunk(params, cfg, batch, rules, caches=caches,
+                             cache_index=cache_index,
+                             decode=cfg.family in ("ssm", "hybrid"))
+    logits = jnp.einsum("btd,dv->btv", h.astype(cfg.dtype),
+                        unembed_matrix(params, cfg).astype(cfg.dtype),
+                        preferred_element_type=jnp.float32)
+    logits = logical_constraint(logits, rules, "batch", None, "act_vocab")
+    return logits, new_caches

@@ -1,0 +1,60 @@
+"""Gradient compression for cross-pod reduction (beyond-paper lever).
+
+int8 blockwise quantisation with error feedback: the quantisation residual
+is carried to the next step so the compressed SGD direction stays unbiased
+in the long run (1-bit Adam / EF-SGD family).  Under pjit the quantised
+tensors are what cross the "pod" axis in the gradient all-reduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_BLK = 256
+
+
+def _enc(x: jnp.ndarray):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % _BLK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dec(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def _is_packed(x) -> bool:
+    return isinstance(x, dict) and set(x) == {"q", "s"}
+
+
+def compress_grads(grads, error_feedback=None):
+    """Returns (quantised_tree, new_error_feedback)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    if error_feedback is None:
+        e_leaves = [jnp.zeros_like(g, jnp.float32) for g in leaves]
+    else:
+        e_leaves = jax.tree.flatten(error_feedback)[0]
+    qs, es = [], []
+    for g, e in zip(leaves, e_leaves):
+        corrected = g.astype(jnp.float32) + e
+        q, s = _enc(corrected)
+        deq = _dec(q, s, g.shape)
+        qs.append({"q": q, "s": s})
+        es.append(corrected - deq)
+    return jax.tree.unflatten(treedef, qs), jax.tree.unflatten(treedef, es)
+
+
+def decompress_grads(qtree, shapes_like):
+    q_leaves = jax.tree.flatten(qtree, is_leaf=_is_packed)[0]
+    ref_leaves, treedef = jax.tree.flatten(shapes_like)
+    outs = [_dec(p["q"], p["s"], r.shape) for p, r in zip(q_leaves, ref_leaves)]
+    return jax.tree.unflatten(treedef, outs)

@@ -1,0 +1,12 @@
+from .heft import (SchedTask, detect_stragglers, heft_schedule,
+                   reschedule_elastic, round_robin_schedule,
+                   simulate_with_stragglers)
+from .simulator import (ClusterSimulator, EventSimulator, SimNode,
+                        load_dryrun_cells)
+from .workflows import INPUTS, WORKFLOWS, TaskDef, all_experiments
+
+__all__ = ["SchedTask", "detect_stragglers", "heft_schedule",
+           "reschedule_elastic", "round_robin_schedule",
+           "simulate_with_stragglers", "ClusterSimulator", "EventSimulator",
+           "SimNode", "load_dryrun_cells", "INPUTS", "WORKFLOWS", "TaskDef",
+           "all_experiments"]

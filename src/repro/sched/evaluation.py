@@ -1,0 +1,137 @@
+"""Evaluation protocol for the Lotaru reproduction (paper §5).
+
+For each (workflow, dataset): downsample the input geometrically, run every
+task locally (normal + CPU-throttled) in the simulator, fit Lotaru and the
+three baselines on exactly the same local observations, then score
+predictions of the *full-size* task runtimes:
+
+  * homogeneous  (§5.2): target = the local machine type;
+  * model adjustment (§5.3): estimated vs actual factor per task/node;
+  * heterogeneous (§5.4): all five target node types.
+
+err_t = |predicted - actual| / actual  (paper eq. 7); MPE = median err.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import (BASELINES, LotaruEstimator, get_node, profile_cluster,
+                        profile_node, target_nodes)
+from repro.core.downsample import partition_sizes
+from .simulator import ClusterSimulator
+from .workflows import INPUTS, WORKFLOWS, TaskDef
+
+
+@dataclass
+class EvalResult:
+    errors: dict          # approach -> workflow -> node -> [per-task err]
+
+    def mpe(self, approach: str, workflow: str | None = None,
+            node: str | None = None) -> float:
+        errs = []
+        for wf, nodes in self.errors[approach].items():
+            if workflow and wf != workflow:
+                continue
+            for nd, es in nodes.items():
+                if node and nd != node:
+                    continue
+                errs.extend(es)
+        return float(np.median(errs)) if errs else float("nan")
+
+    def all_errors(self, approach: str, workflow: str | None = None,
+                   node: str | None = None) -> np.ndarray:
+        errs = []
+        for wf, nodes in self.errors[approach].items():
+            if workflow and wf != workflow:
+                continue
+            for nd, es in nodes.items():
+                if node and nd != node:
+                    continue
+                errs.extend(es)
+        return np.asarray(errs)
+
+
+APPROACHES = ("lotaru", "naive", "online_m", "online_p")
+
+
+def run_evaluation(seed: int = 0, n_partitions: int = 10,
+                   heterogeneous: bool = True,
+                   workflows: dict | None = None,
+                   inputs: dict | None = None) -> EvalResult:
+    workflows = workflows or WORKFLOWS
+    inputs = inputs or INPUTS
+    sim = ClusterSimulator(seed=seed)
+    truth_sim = ClusterSimulator(seed=seed + 1000)   # independent noise
+    local = get_node("local-cpu")
+    local_bench = profile_node(local, np.random.default_rng(seed + 7))
+    targets = target_nodes() if heterogeneous else [local]
+    tbenches = profile_cluster(target_nodes(), seed=seed + 13)
+
+    errors: dict = {a: {} for a in APPROACHES}
+    for (wf_name, ds), size in inputs.items():
+        wf_key = f"{wf_name}-{ds}"
+        tasks = workflows[wf_name]
+        by_name = {t.name: t for t in tasks}
+
+        est = LotaruEstimator(local_bench, tbenches)
+        est.fit_tasks([t.name for t in tasks], size,
+                      lambda name, s, cf: sim.run_task(by_name[name], local,
+                                                       s, cpu_factor=cf),
+                      n_partitions=n_partitions)
+
+        # baselines see the identical local observations
+        fitted_baselines = {}
+        for bname, cls in BASELINES.items():
+            fitted_baselines[bname] = {}
+            for t in tasks:
+                ft = est.tasks[t.name]
+                fitted_baselines[bname][t.name] = cls().fit(ft.sizes,
+                                                            ft.runtimes)
+
+        for a in APPROACHES:
+            errors[a].setdefault(wf_key, {})
+        for node in targets:
+            actual = {t.name: truth_sim.run_task(t, node, size)
+                      for t in tasks}
+            for a in APPROACHES:
+                errs = []
+                for t in tasks:
+                    if a == "lotaru":
+                        if node.name == local.name:
+                            pred, _ = est.predict_local(t.name, size)
+                        else:
+                            pred, _ = est.predict(t.name, node.name, size)
+                    else:
+                        pred = float(np.asarray(
+                            fitted_baselines[a][t.name].predict(size)).reshape(-1)[0])
+                    errs.append(abs(pred - actual[t.name]) / actual[t.name])
+                errors[a][wf_key][node.name] = errs
+    return EvalResult(errors=errors)
+
+
+def factor_table(seed: int = 0, workflow: str = "eager", ds: int = 1):
+    """Paper Tables 4+5: estimated vs actual adjustment factors."""
+    sim = ClusterSimulator(seed=seed)
+    local = get_node("local-cpu")
+    local_bench = profile_node(local, np.random.default_rng(seed + 7))
+    tbenches = profile_cluster(target_nodes(), seed=seed + 13)
+    tasks = WORKFLOWS[workflow]
+    by_name = {t.name: t for t in tasks}
+    size = INPUTS[(workflow, ds)]
+
+    est = LotaruEstimator(local_bench, tbenches)
+    est.fit_tasks([t.name for t in tasks], size,
+                  lambda name, s, cf: sim.run_task(by_name[name], local, s,
+                                                   cpu_factor=cf))
+    rows = []
+    for t in tasks:
+        row = {"task": t.name, "w": est.tasks[t.name].w}
+        for node in target_nodes():
+            est_f = est.factor(t.name, node.name)
+            act_f = sim.actual_factor(t, local, node, size)
+            row[node.name] = {"estimated": est_f, "actual": act_f,
+                              "diff": abs(est_f - act_f)}
+        rows.append(row)
+    return rows

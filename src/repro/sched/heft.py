@@ -1,0 +1,158 @@
+"""HEFT (Topcuoglu et al.) + Lotaru-informed variants.
+
+The paper's motivation (§2.2): HEFT-class schedulers need runtime estimates
+for every (task, node) pair, which Lotaru supplies online.  We implement:
+
+  * ``heft_schedule``     — classic HEFT over a (task x node) estimate matrix
+  * uncertainty-aware variant: ranks use mean + k*sigma (Bayesian predictive
+    std from Lotaru), penalising placements whose runtime is *uncertain* —
+    the paper's "advanced scheduling methods" consumer.
+  * straggler mitigation — runtime > mean + k*sigma triggers speculative
+    re-execution on the fastest idle node.
+  * elastic rescheduling — on node loss/join, unfinished tasks re-ranked.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class SchedTask:
+    id: str
+    succ: list[str] = field(default_factory=list)
+    pred: list[str] = field(default_factory=list)
+
+
+def _upward_rank(tasks: dict[str, SchedTask], cost: dict[str, dict[str, float]],
+                 comm: float = 0.0) -> dict[str, float]:
+    mean_cost = {t: float(np.mean(list(cost[t].values()))) for t in tasks}
+    rank: dict[str, float] = {}
+
+    def rec(tid: str) -> float:
+        if tid in rank:
+            return rank[tid]
+        t = tasks[tid]
+        best_succ = max((comm + rec(s) for s in t.succ), default=0.0)
+        rank[tid] = mean_cost[tid] + best_succ
+        return rank[tid]
+
+    for tid in tasks:
+        rec(tid)
+    return rank
+
+
+def heft_schedule(tasks: dict[str, SchedTask],
+                  cost: dict[str, dict[str, float]],
+                  nodes: list[str],
+                  uncertainty: dict[str, dict[str, float]] | None = None,
+                  risk_k: float = 0.0) -> dict:
+    """cost[task][node] = estimated runtime; uncertainty likewise (sigma).
+
+    risk_k > 0 gives the uncertainty-aware variant: effective cost =
+    mean + risk_k * sigma.  Returns {assignment, start, finish, makespan,
+    order}."""
+    def eff(tid: str, node: str) -> float:
+        c = cost[tid][node]
+        if uncertainty is not None and risk_k > 0:
+            c = c + risk_k * uncertainty[tid][node]
+        return c
+
+    rank = _upward_rank(tasks, cost)
+    order = sorted(tasks, key=lambda t: -rank[t])
+    node_free = {n: 0.0 for n in nodes}
+    finish: dict[str, float] = {}
+    start: dict[str, float] = {}
+    assignment: dict[str, str] = {}
+    for tid in order:
+        ready = max((finish[p] for p in tasks[tid].pred), default=0.0)
+        best, best_ft, best_st = None, float("inf"), 0.0
+        for n in nodes:
+            st = max(node_free[n], ready)
+            ft = st + eff(tid, n)
+            if ft < best_ft:
+                best, best_ft, best_st = n, ft, st
+        assignment[tid] = best
+        start[tid] = best_st
+        finish[tid] = best_ft
+        node_free[best] = best_ft
+    return {"assignment": assignment, "start": start, "finish": finish,
+            "makespan": max(finish.values()) if finish else 0.0,
+            "order": order}
+
+
+def round_robin_schedule(tasks: dict[str, SchedTask], nodes: list[str]) -> dict:
+    """FIFO/fair baseline (what resource managers do without estimates)."""
+    assignment = {tid: nodes[i % len(nodes)]
+                  for i, tid in enumerate(sorted(tasks))}
+    return {"assignment": assignment}
+
+
+# ---------------------------------------------------------------------------
+# Straggler mitigation + elastic rescheduling (simulation-level)
+# ---------------------------------------------------------------------------
+def detect_stragglers(records: list[dict], predictions: dict[str, tuple],
+                      k: float = 3.0) -> list[str]:
+    """records: [{id, node, duration}]; predictions[id] = (mean, sigma).
+    Returns ids whose measured duration exceeds mean + k*sigma."""
+    out = []
+    for r in records:
+        mean, sigma = predictions.get(r["id"], (None, None))
+        if mean is None:
+            continue
+        if r["duration"] > mean + k * max(sigma, 1e-9):
+            out.append(r["id"])
+    return out
+
+
+def simulate_with_stragglers(tasks, cost, nodes, true_runtime,
+                             predictions, straggler_k: float = 3.0,
+                             speculative: bool = True):
+    """Execute a HEFT schedule where true runtimes may include stragglers;
+    speculative copies launch on the fastest other node when the predicted
+    envelope (mean + k*sigma) is exceeded.  Returns makespans with and
+    without mitigation (list-scheduling approximation)."""
+    sched = heft_schedule(tasks, cost, nodes)
+    node_free = {n: 0.0 for n in nodes}
+    finish: dict[str, float] = {}
+    rank = _upward_rank(tasks, cost)
+    mitigated = 0
+    for tid in sorted(tasks, key=lambda t: -rank[t]):
+        ready = max((finish[p] for p in tasks[tid].pred), default=0.0)
+        node = sched["assignment"][tid]
+        st = max(node_free[node], ready)
+        dur = true_runtime(tid, node)
+        mean, sigma = predictions[tid]
+        envelope = mean + straggler_k * max(sigma, 1e-9)
+        if speculative and dur > envelope:
+            # launch a copy at the envelope time on the best other node
+            others = [n for n in nodes if not n.startswith(node.split("/")[0])]
+            others = others or [n for n in nodes if n != node]
+            alt = min(others, key=lambda n: cost[tid][n]) if others else node
+            alt_st = max(node_free[alt], st + envelope)
+            alt_ft = alt_st + true_runtime(tid, alt)
+            orig_ft = st + dur
+            if alt_ft < orig_ft:
+                mitigated += 1
+                finish[tid] = alt_ft
+                node_free[alt] = alt_ft
+                node_free[node] = min(orig_ft, alt_ft)  # original killed
+                continue
+        finish[tid] = st + dur
+        node_free[node] = st + dur
+    return {"makespan": max(finish.values()) if finish else 0.0,
+            "mitigated": mitigated}
+
+
+def reschedule_elastic(tasks, cost, nodes_alive, done: set[str]) -> dict:
+    """Re-run HEFT over the unfinished subgraph on surviving nodes."""
+    remaining = {tid: t for tid, t in tasks.items() if tid not in done}
+    pruned = {}
+    for tid, t in remaining.items():
+        pruned[tid] = SchedTask(id=tid,
+                                succ=[s for s in t.succ if s in remaining],
+                                pred=[p for p in t.pred if p in remaining])
+    cost_sub = {tid: {n: cost[tid][n] for n in nodes_alive}
+                for tid in pruned}
+    return heft_schedule(pruned, cost_sub, nodes_alive)

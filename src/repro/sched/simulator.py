@@ -1,0 +1,192 @@
+"""Heterogeneous-cluster ground-truth simulator.
+
+Two workload planes share the node registry:
+
+* genomics plane — nf-core-like tasks with hidden (cpu_unit, io_unit)
+  ground truth (see workflows.py).  Supports the paper's CPU-frequency
+  reduction faithfully via ``cpu_factor``.
+* ML plane — (arch x shape) workload cells whose hidden ground truth is the
+  three-term roofline of the *actual compiled dry-run HLO*, scaled by each
+  node type's rates and hidden per-family efficiency.
+
+Also provides the discrete-event engine used by the scheduler benchmarks
+(task queues per node, failures, stragglers, elastic node loss/join).
+"""
+from __future__ import annotations
+
+import heapq
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.nodes import NodeType, get_node
+from .workflows import REF_CPU, REF_IO, TaskDef, effective_size
+
+
+class ClusterSimulator:
+    """Ground-truth runtimes; Lotaru never sees the units, only runtimes.
+
+    ``systematic`` adds a fixed per-(task, node) efficiency multiplier
+    (lognormal, derived from a stable hash): real tools hit different
+    codepaths / cache behaviour on different machines, which is exactly why
+    scalar factor adjustment has an error floor in the paper's Tables 4-6.
+    """
+
+    def __init__(self, seed: int = 0, noise: float = 0.05,
+                 systematic: float = 0.10):
+        self.rng = np.random.default_rng(seed)
+        self.noise = noise
+        self.systematic = systematic
+
+    def _sys_mult(self, task_name: str, node_name: str) -> float:
+        if self.systematic <= 0:
+            return 1.0
+        import zlib  # stable across processes (unlike builtin hash)
+        h = zlib.crc32(f"{task_name}|{node_name}|sys".encode()) % (2 ** 31)
+        g = np.random.default_rng(h).normal(0.0, self.systematic)
+        return float(np.exp(g))
+
+    # ---- genomics plane ---------------------------------------------------
+    def run_task(self, task: TaskDef, node: NodeType, size_gb: float,
+                 cpu_factor: float = 1.0, noisy: bool = True) -> float:
+        s = effective_size(task, size_gb)
+        cpu_t = (task.base * task.cpu_share + task.cpu_unit * s) \
+            * (REF_CPU / node.cpu_score) / cpu_factor
+        io_t = (task.base * (1 - task.cpu_share) + task.io_unit * s) \
+            * (REF_IO / node.io_bw)
+        t = (cpu_t + io_t) * self._sys_mult(task.name, node.name)
+        if noisy:
+            t *= self.rng.lognormal(0.0, self.noise)
+        return float(t)
+
+    def expected_task_runtime(self, task: TaskDef, node: NodeType,
+                              size_gb: float) -> float:
+        return self.run_task(task, node, size_gb, noisy=False)
+
+    def actual_factor(self, task: TaskDef, local: NodeType, target: NodeType,
+                      size_gb: float) -> float:
+        """True runtime ratio target/local (paper Tables 4-5)."""
+        return (self.expected_task_runtime(task, target, size_gb)
+                / self.expected_task_runtime(task, local, size_gb))
+
+    # ---- ML plane ----------------------------------------------------------
+    def run_cell(self, cell: dict, node: NodeType, token_fraction: float = 1.0,
+                 chips: int | None = None, cpu_factor: float = 1.0,
+                 noisy: bool = True) -> float:
+        """Step time of a dry-run cell record on `chips` of `node`'s type.
+        ``cpu_factor < 1`` throttles the compute units (the paper's reduced
+        CPU-frequency probe, phase 2)."""
+        r = cell["roofline"]
+        base_chips = r["chips"]
+        chips = chips or base_chips
+        scale = token_fraction * base_chips / chips
+        family = cell.get("family", "*")
+        eff = node.eff(family)
+        compute = r["flops_per_device"] * scale / (node.peak_flops * eff
+                                                   * cpu_factor)
+        memory = r["bytes_per_device"] * scale / node.hbm_bw
+        coll = r["coll_bytes_per_device"] * scale / node.link_bw
+        t = max(compute, memory, coll) + 0.35 * min(compute, memory, coll)
+        if noisy:
+            t *= self.rng.lognormal(0.0, self.noise)
+        return float(t)
+
+
+# ---------------------------------------------------------------------------
+# Discrete-event engine (scheduler benchmarks, straggler/failure injection)
+# ---------------------------------------------------------------------------
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    kind: str = field(compare=False)
+    payload: dict = field(compare=False, default_factory=dict)
+
+
+@dataclass
+class SimNode:
+    name: str
+    node_type: NodeType
+    busy_until: float = 0.0
+    alive: bool = True
+    slowdown: float = 1.0      # straggler multiplier (hidden)
+
+
+class EventSimulator:
+    """Executes a scheduled task DAG over concrete nodes with optional
+    failure/straggler injection.  Returns per-task records + makespan."""
+
+    def __init__(self, nodes: list[SimNode], sim: ClusterSimulator,
+                 seed: int = 0):
+        self.nodes = {n.name: n for n in nodes}
+        self.sim = sim
+        self.rng = np.random.default_rng(seed + 17)
+
+    def run_schedule(self, tasks: list[dict], deps: dict[str, list[str]],
+                     assignment: dict[str, str],
+                     runtime_fn=None,
+                     fail_at: dict[str, float] | None = None,
+                     reassign_fn=None) -> dict:
+        """tasks: [{id, task(TaskDef), size}]; deps: id -> prereq ids;
+        assignment: id -> node name.  runtime_fn overrides the ground truth.
+        ``fail_at``: node -> time (node dies; queued work is re-assigned via
+        ``reassign_fn(task_id, dead_node) -> node``)."""
+        fail_at = dict(fail_at or {})
+        by_id = {t["id"]: t for t in tasks}
+        done: dict[str, float] = {}
+        records = []
+        remaining = set(by_id)
+        node_free = {n: 0.0 for n in self.nodes}
+        t_now = 0.0
+        guard = 0
+        while remaining and guard < 10 * len(by_id):
+            guard += 1
+            ready = [tid for tid in sorted(remaining)
+                     if all(d in done for d in deps.get(tid, []))]
+            if not ready:
+                break
+            progressed = False
+            for tid in ready:
+                rec = by_id[tid]
+                node_name = assignment[tid]
+                node = self.nodes[node_name]
+                # node failure: re-assign
+                if node_name in fail_at and max(
+                        node_free[node_name],
+                        max([done[d] for d in deps.get(tid, [])], default=0.0)
+                ) >= fail_at[node_name]:
+                    node.alive = False
+                    if reassign_fn is None:
+                        continue
+                    node_name = reassign_fn(tid, node_name)
+                    node = self.nodes[node_name]
+                start = max(node_free[node_name],
+                            max([done[d] for d in deps.get(tid, [])],
+                                default=0.0))
+                dur = (runtime_fn(rec, node) if runtime_fn else
+                       self.sim.run_task(rec["task"], node.node_type,
+                                         rec["size"]))
+                dur *= node.slowdown
+                done[tid] = start + dur
+                node_free[node_name] = start + dur
+                records.append({"id": tid, "node": node_name, "start": start,
+                                "duration": dur, "end": start + dur})
+                remaining.discard(tid)
+                progressed = True
+            if not progressed:
+                break
+        makespan = max((r["end"] for r in records), default=0.0)
+        return {"records": records, "makespan": makespan,
+                "completed": len(records), "total": len(by_id)}
+
+
+def load_dryrun_cells(art_dir: str | Path) -> list[dict]:
+    """Load dry-run artifacts (the ML-plane task universe)."""
+    out = []
+    for p in sorted(Path(art_dir).glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") == "ok":
+            out.append(r)
+    return out

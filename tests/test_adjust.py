@@ -1,0 +1,59 @@
+"""Adjustment-factor math (paper eqs. 5-6) properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (cpu_weight, deviation, roofline_weights,
+                        runtime_factor, runtime_factor3)
+from repro.core.profiler import BenchResult
+
+
+def _bench(node="x", cpu=400.0, gf=100.0, mem=50.0, io=400.0, link=10.0):
+    return BenchResult(node=node, cpu_events_s=cpu, matmul_gflops=gf,
+                       mem_gbps=mem, io_read_mbps=io, io_write_mbps=io,
+                       link_gbps=link)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(-0.5, 2.0), st.floats(0.5, 0.95))
+def test_cpu_weight_clamped(median_dev, freq_new):
+    w = cpu_weight(median_dev, 1.0, freq_new)
+    assert 0.0 <= w <= 1.0
+
+
+def test_cpu_weight_pure_cpu_task():
+    # 20% CPU reduction -> 25% slowdown for a fully CPU-bound task
+    w = cpu_weight(0.25, 1.0, 0.8)
+    assert abs(w - 1.0) < 1e-9
+    # io-bound task: no slowdown
+    assert cpu_weight(0.0, 1.0, 0.8) == 0.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(0.0, 1.0), st.floats(100.0, 1000.0), st.floats(100.0, 1000.0),
+       st.floats(100.0, 1000.0), st.floats(100.0, 1000.0))
+def test_factor_interpolates_resource_ratios(w, cl, ct, il, it):
+    local = _bench(cpu=cl, io=il)
+    target = _bench(cpu=ct, io=it)
+    f = runtime_factor(w, local, target)
+    lo = min(cl / ct, il / it)
+    hi = max(cl / ct, il / it)
+    assert lo - 1e-9 <= f <= hi + 1e-9
+
+
+def test_factor_identity_for_identical_nodes():
+    b = _bench()
+    assert abs(runtime_factor(0.7, b, b) - 1.0) < 1e-9
+    assert abs(runtime_factor3((0.5, 0.3, 0.2), b, b) - 1.0) < 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(0, 1e3), st.floats(0, 1e3), st.floats(0, 1e3))
+def test_roofline_weights_normalised(c, m, n):
+    wc, wm, wn = roofline_weights(c, m, n)
+    assert abs(wc + wm + wn - 1.0) < 1e-6
+    assert min(wc, wm, wn) >= 0
+
+
+def test_deviation_sign():
+    assert deviation(125.0, 100.0) == 0.25
+    assert deviation(90.0, 100.0) == -0.1

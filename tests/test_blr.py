@@ -1,0 +1,81 @@
+"""BLR + Pearson gating: unit + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blr
+
+
+def test_perfect_linear_recovery():
+    x = np.array([1.0, 2.0, 4.0, 8.0, 16.0])
+    y = 3.0 * x + 5.0
+    model = blr.fit_task(x, y)
+    assert model.correlated
+    pred, std = model.predict(32.0)
+    assert abs(pred - 101.0) / 101.0 < 0.05
+    assert std >= 0
+
+
+def test_pearson_bounds_and_known_values():
+    x = np.arange(10.0)
+    assert blr.pearson(x, 2 * x + 1) == pytest.approx(1.0)
+    assert blr.pearson(x, -x) == pytest.approx(-1.0)
+    assert blr.pearson(x, np.ones(10)) == 0.0
+
+
+def test_median_fallback_for_uncorrelated():
+    rng = np.random.default_rng(0)
+    x = np.linspace(1, 10, 20)
+    y = 50.0 + rng.normal(0, 0.5, 20)   # flat: no size correlation
+    model = blr.fit_task(x, y)
+    assert not model.correlated
+    pred, _ = model.predict(1000.0)     # wild extrapolation stays at median
+    assert abs(pred - 50.0) < 2.0
+
+
+def test_uncertainty_interval_covers():
+    rng = np.random.default_rng(1)
+    x = np.linspace(1, 8, 8)
+    y = 10 * x + rng.normal(0, 2.0, 8)
+    post = blr.fit(x, y)
+    lo, hi = blr.predict_interval(post, 5.0, confidence=0.9)
+    assert float(lo) < 50.0 < float(hi)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(1.0, 1e4), min_size=3, max_size=12, unique=True),
+       st.floats(0.1, 100.0), st.floats(0.0, 50.0))
+def test_blr_linear_data_predicts_linearly(xs, slope, intercept):
+    x = np.sort(np.array(xs))
+    y = slope * x + intercept
+    post = blr.fit(x, y)
+    mean, std = blr.predict(post, x)
+    # predictions at the training points are close to the data, measured
+    # against the data scale (the L2 prior shrinks small-n fits, so tiny
+    # y-values can carry large *pointwise* relative error by design)
+    rel = np.abs(np.asarray(mean) - y) / float(np.max(np.abs(y)))
+    assert float(np.median(rel)) < 0.15
+    assert np.all(np.asarray(std) >= 0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3), min_size=2, max_size=20),
+       st.lists(st.floats(-1e3, 1e3), min_size=2, max_size=20))
+def test_pearson_always_in_unit_interval(xs, ys):
+    n = min(len(xs), len(ys))
+    p = blr.pearson(np.array(xs[:n]), np.array(ys[:n]))
+    assert -1.0 - 1e-9 <= p <= 1.0 + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(3, 10), st.floats(0.5, 20.0))
+def test_more_data_not_more_uncertain(n, slope):
+    """Posterior predictive std at a fixed point shrinks (weakly) as
+    consistent observations accumulate."""
+    x_full = np.linspace(1, 10, 10)
+    y_full = slope * x_full
+    post_small = blr.fit(x_full[:3], y_full[:3])
+    post_big = blr.fit(x_full, y_full)
+    _, std_small = blr.predict(post_small, 5.0)
+    _, std_big = blr.predict(post_big, 5.0)
+    assert float(std_big) <= float(std_small) * 1.5 + 1e-6

@@ -1,0 +1,67 @@
+"""Downsampling ladder + profiler properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.downsample import (downsample_workload, partition_sizes,
+                                   reduced_model_factor)
+from repro.core.profiler import BenchResult, profile_node
+from repro.core.nodes import NODE_TYPES, get_node, target_nodes
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.1, 1e4), st.integers(1, 16))
+def test_partition_ladder_geometric(x, n):
+    parts = partition_sizes(x, n)
+    assert len(parts) == n
+    assert abs(parts[0] - x / 2) < 1e-9
+    for a, b in zip(parts, parts[1:]):
+        assert abs(b - a / 2) < 1e-9
+    # cumulative size is strictly less than the original input
+    assert sum(parts) < x
+
+
+def test_workload_downsampling_halves_tokens():
+    parts = downsample_workload(seq=4096, global_batch=256, n=6)
+    toks = [p.tokens for p in parts]
+    for a, b in zip(toks, toks[1:]):
+        assert b * 2 == a
+    assert toks[0] == 4096 * 128
+
+
+def test_workload_downsampling_batch_floor():
+    parts = downsample_workload(seq=64, global_batch=2, n=8, min_seq=32)
+    assert all(p.batch >= 1 and p.seq >= 32 for p in parts)
+
+
+def test_reduced_model_factor():
+    assert reduced_model_factor(7_600_000_000, 76_000_000) == 100.0
+
+
+def test_profile_node_measurement_noise_bounded():
+    node = get_node("tpu-v5e")
+    rng = np.random.default_rng(0)
+    benches = [profile_node(node, rng) for _ in range(20)]
+    gf = np.array([b.matmul_gflops for b in benches])
+    true = node.peak_flops / 1e9
+    assert abs(np.mean(gf) - true) / true < 0.05
+    assert np.std(gf) / true < 0.10
+
+
+def test_node_registry_consistency():
+    assert len(target_nodes()) == 5
+    for n in NODE_TYPES.values():
+        assert n.peak_flops > 0 and n.hbm_bw > 0 and n.link_bw > 0
+        assert 0 < n.eff("dense") <= 1.0
+    # ordering matches the paper's machine spread (old < new)
+    assert (NODE_TYPES["tpu-v2"].peak_flops
+            < NODE_TYPES["tpu-v4"].peak_flops
+            < NODE_TYPES["tpu-v5p"].peak_flops)
+
+
+def test_real_local_profile_runs():
+    from repro.core.profiler import profile_local
+    b = profile_local(fast=True)
+    assert b.cpu_events_s > 0
+    assert b.matmul_gflops > 0.1
+    assert b.mem_gbps > 0.01
+    assert b.io_read_mbps > 0.1

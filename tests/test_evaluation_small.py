@@ -1,0 +1,52 @@
+"""Evaluation protocol unit checks (fast, single workflow)."""
+import numpy as np
+
+from repro.sched.evaluation import APPROACHES, run_evaluation
+from repro.sched.simulator import ClusterSimulator
+from repro.sched.workflows import INPUTS, WORKFLOWS, TaskDef, effective_size
+from repro.core.nodes import get_node
+
+
+def test_effective_size_kinds():
+    lin = TaskDef("a", "w", 10, 5, kind="linear")
+    flat = TaskDef("b", "w", 10, 5, kind="flat")
+    sq = TaskDef("c", "w", 10, 5, kind="sqrt")
+    assert effective_size(lin, 9.0) == 9.0
+    assert effective_size(flat, 9.0) == 0.0
+    assert effective_size(sq, 9.0) == 3.0
+
+
+def test_simulator_runtime_scales_with_node_speed():
+    sim = ClusterSimulator(seed=0, systematic=0.0)
+    t = WORKFLOWS["eager"][0]            # bwa (cpu-heavy)
+    slow = sim.expected_task_runtime(t, get_node("tpu-v2"), 10.0)
+    fast = sim.expected_task_runtime(t, get_node("tpu-v5p"), 10.0)
+    assert slow > fast                    # v2 cpu_score 223 < v5p 523
+
+
+def test_actual_factor_reflects_cpu_io_mix():
+    sim = ClusterSimulator(seed=0, systematic=0.0)
+    local = get_node("local-cpu")
+    v2 = get_node("tpu-v2")
+    cpu_task = WORKFLOWS["eager"][0]      # bwa: cpu-dominant
+    io_task = [t for t in WORKFLOWS["eager"] if t.name == "markduplicates"][0]
+    f_cpu = sim.actual_factor(cpu_task, local, v2, 10.0)
+    f_io = sim.actual_factor(io_task, local, v2, 10.0)
+    # both slower on v2, with the cpu-bound task hit harder by cpu ratio
+    assert f_cpu > 1.0 and f_io > 1.0
+    assert abs(f_cpu - 458 / 223) < 0.4
+
+
+def test_workflow_suite_matches_paper_task_counts():
+    counts = {w: len(ts) for w, ts in WORKFLOWS.items()}
+    assert counts == {"eager": 13, "methylseq": 8, "chipseq": 14,
+                      "atacseq": 14, "bacass": 5}      # paper Table 3
+    assert len(INPUTS) == 10                            # 5 workflows x 2
+
+
+def test_run_evaluation_structure():
+    res = run_evaluation(seed=1, n_partitions=6, heterogeneous=False,
+                         inputs={("bacass", 1): 3.64})
+    for a in APPROACHES:
+        assert res.mpe(a) >= 0
+        assert len(res.all_errors(a)) == 5              # bacass tasks

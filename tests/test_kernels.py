@@ -1,0 +1,78 @@
+"""Per-kernel allclose vs pure-jnp oracles: shape/dtype sweeps (interpret)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.ssd import ssd_ref, ssd_scan
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,D,causal", [
+    (1, 2, 2, 64, 64, 32, True),
+    (2, 4, 2, 128, 128, 64, True),      # GQA
+    (1, 4, 1, 96, 160, 32, False),      # MQA, unaligned, bidir
+    (1, 2, 2, 1, 256, 64, False),       # decode shape
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_oracle(B, Hq, Hkv, Sq, Sk, D, causal, dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(0, 1, (B, Hq, Sq, D)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (B, Hkv, Sk, D)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (B, Hkv, Sk, D)), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_kv_len_mask():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(0, 1, (1, 2, 8, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 2, 128, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, 2, 128, 32)), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, kv_len=50, block_k=32,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=False, kv_len=50)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+    # keys beyond kv_len must not affect the output
+    k2 = k.at[:, :, 50:].set(1e3)
+    out2 = flash_attention(q, k2, v, causal=False, kv_len=50, block_k=32,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("B,T,H,P,G,N,chunk", [
+    (1, 32, 2, 8, 1, 8, 8),
+    (2, 64, 4, 16, 2, 16, 16),
+    (1, 50, 4, 8, 1, 8, 16),            # unaligned T
+])
+def test_ssd_matches_naive_recurrence(B, T, H, P, G, N, chunk):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(0, 1, (B, T, H, P)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(0.05, 0.02, (B, T, H))), jnp.float32)
+    a = jnp.asarray(-np.abs(rng.normal(1.0, 0.3, (H,))), jnp.float32)
+    B_ = jnp.asarray(rng.normal(0, 1, (B, T, G, N)), jnp.float32)
+    C_ = jnp.asarray(rng.normal(0, 1, (B, T, G, N)), jnp.float32)
+    out = ssd_scan(x, dt, a, B_, C_, chunk=chunk, interpret=True)
+    ref = ssd_ref(x, dt, a, B_, C_)
+    scale = float(jnp.max(jnp.abs(ref)))
+    np.testing.assert_allclose(np.asarray(out) / scale,
+                               np.asarray(ref) / scale, atol=1e-5)
+
+
+def test_models_ssd_chunked_matches_kernel_ref():
+    from repro.models.mamba2 import ssd_chunked
+    rng = np.random.default_rng(3)
+    B, T, H, P, G, N = 2, 48, 4, 8, 1, 8
+    x = jnp.asarray(rng.normal(0, 1, (B, T, H, P)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(0.05, 0.02, (B, T, H))), jnp.float32)
+    a = jnp.asarray(-np.abs(rng.normal(1.0, 0.3, (H,))), jnp.float32)
+    B_ = jnp.asarray(rng.normal(0, 1, (B, T, G, N)), jnp.float32)
+    C_ = jnp.asarray(rng.normal(0, 1, (B, T, G, N)), jnp.float32)
+    y, _ = ssd_chunked(x, dt, a, B_, C_, chunk=16)
+    ref = ssd_ref(x, dt, a, B_, C_)
+    scale = float(jnp.max(jnp.abs(ref)))
+    np.testing.assert_allclose(np.asarray(y) / scale,
+                               np.asarray(ref) / scale, atol=1e-5)

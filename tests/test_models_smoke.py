@@ -1,0 +1,99 @@
+"""Per-architecture smoke tests: reduced same-family configs, one
+forward/train step on CPU, shape + finiteness asserts, and prefill/decode
+consistency against the full forward pass."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import list_archs, smoke_config
+from repro.launch.shapes import concrete_batch
+from repro.models import AxisRules, build_model
+
+RULES = AxisRules(fsdp_axes=(), dp_axes=())
+B, T = 2, 24
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_train_step(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = concrete_batch(cfg, "train", B, T)
+    loss, metrics = jax.jit(lambda p, b: model.loss(p, b, RULES))(params, batch)
+    assert np.isfinite(float(loss)), arch
+    assert float(loss) > 0
+    # one SGD-flavoured step moves the loss (gradients flow everywhere)
+    grads = jax.grad(lambda p: model.loss(p, batch, RULES)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_prefill_decode_shapes(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = concrete_batch(cfg, "prefill", B, T)
+    caches = model.init_caches(B, max_len=T + 4, cross_len=T)
+    logits, caches = jax.jit(lambda p, b, c: model.prefill(p, b, c, RULES))(
+        params, batch, caches)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    dbatch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    if cfg.family == "vlm":
+        dbatch["positions"] = jnp.full((B, 1, 3), T, jnp.int32)
+    logits2, _ = jax.jit(lambda p, b, c, i: model.decode(p, b, c, i, RULES))(
+        params, dbatch, caches, jnp.asarray(T, jnp.int32))
+    assert logits2.shape == (B, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "mamba2-1.3b", "zamba2-1.2b",
+                                  "stablelm-1.6b"])
+def test_decode_consistent_with_full_forward(arch):
+    """Prefill T tokens then decode token T must equal running the trunk
+    over the full T+1 sequence (same final-position logits)."""
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, T + 1), 0, cfg.vocab)
+
+    # full pass: loss path exposes logits via prefill over T+1 with caches
+    caches_full = model.init_caches(B, max_len=T + 1)
+    logits_full, _ = model.prefill(params, {"tokens": tokens}, caches_full, RULES)
+
+    # incremental: prefill T, decode 1
+    caches = model.init_caches(B, max_len=T + 1)
+    _, caches = model.prefill(params, {"tokens": tokens[:, :T]}, caches, RULES)
+    logits_dec, _ = model.decode(params, {"tokens": tokens[:, T:]}, caches,
+                                 jnp.asarray(T, jnp.int32), RULES)
+    np.testing.assert_allclose(
+        np.asarray(logits_full[:, -1], np.float32),
+        np.asarray(logits_dec[:, -1], np.float32), atol=3e-2, rtol=3e-2)
+
+
+def test_param_counts_match_published_sizes():
+    """Analytic param counts of the full configs land near the published
+    model sizes (sanity for roofline MODEL_FLOPS)."""
+    from repro.configs import get_config
+    expect = {
+        "qwen2-7b": (7.6e9, 0.15),
+        "stablelm-12b": (12.1e9, 0.15),
+        "starcoder2-15b": (16e9, 0.15),
+        "stablelm-1.6b": (1.6e9, 0.25),
+        "llama4-maverick-400b-a17b": (400e9, 0.15),
+        "qwen3-moe-30b-a3b": (30e9, 0.15),
+        "mamba2-1.3b": (1.3e9, 0.35),
+        "zamba2-1.2b": (1.2e9, 0.45),
+    }
+    for arch, (n, tol) in expect.items():
+        got = get_config(arch).param_count()
+        assert abs(got - n) / n < tol, (arch, got, n)
+
+
+def test_llama4_active_params():
+    from repro.configs import get_config
+    cfg = get_config("llama4-maverick-400b-a17b")
+    active = cfg.active_param_count()
+    assert 10e9 < active < 25e9, active   # ~17B active

@@ -1,0 +1,81 @@
+"""HEFT + straggler/elastic invariants, with hypothesis over random DAGs."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.sched.heft import (SchedTask, heft_schedule, reschedule_elastic,
+                              detect_stragglers)
+
+
+def _random_dag(rng, n_tasks, n_nodes):
+    tasks = {f"t{i}": SchedTask(id=f"t{i}") for i in range(n_tasks)}
+    for i in range(n_tasks):
+        for j in range(i + 1, n_tasks):
+            if rng.random() < 0.25:
+                tasks[f"t{i}"].succ.append(f"t{j}")
+                tasks[f"t{j}"].pred.append(f"t{i}")
+    nodes = [f"n{k}" for k in range(n_nodes)]
+    cost = {t: {n: float(rng.uniform(1, 100)) for n in nodes} for t in tasks}
+    return tasks, cost, nodes
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 14), st.integers(1, 5))
+def test_heft_schedule_valid(seed, n_tasks, n_nodes):
+    rng = np.random.default_rng(seed)
+    tasks, cost, nodes = _random_dag(rng, n_tasks, n_nodes)
+    s = heft_schedule(tasks, cost, nodes)
+    # every task assigned to a real node
+    assert set(s["assignment"]) == set(tasks)
+    assert all(n in nodes for n in s["assignment"].values())
+    # dependencies respected
+    for tid, t in tasks.items():
+        for p in t.pred:
+            assert s["start"][tid] >= s["finish"][p] - 1e-9
+    # no overlap on a node
+    by_node: dict = {}
+    for tid, n in s["assignment"].items():
+        by_node.setdefault(n, []).append((s["start"][tid], s["finish"][tid]))
+    for spans in by_node.values():
+        spans.sort()
+        for (s1, f1), (s2, f2) in zip(spans, spans[1:]):
+            assert s2 >= f1 - 1e-9
+    # makespan >= longest single task's best placement
+    assert s["makespan"] >= max(min(cost[t].values()) for t in tasks) - 1e-9
+
+
+def test_heft_prefers_fast_node_for_serial_chain():
+    tasks = {"a": SchedTask(id="a", succ=["b"]),
+             "b": SchedTask(id="b", pred=["a"], succ=["c"]),
+             "c": SchedTask(id="c", pred=["b"])}
+    cost = {t: {"slow": 10.0, "fast": 1.0} for t in tasks}
+    s = heft_schedule(tasks, cost, ["slow", "fast"])
+    assert all(v == "fast" for v in s["assignment"].values())
+    assert abs(s["makespan"] - 3.0) < 1e-9
+
+
+def test_uncertainty_aware_avoids_risky_node():
+    tasks = {"a": SchedTask(id="a")}
+    cost = {"a": {"n1": 10.0, "n2": 11.0}}
+    unc = {"a": {"n1": 10.0, "n2": 0.1}}
+    plain = heft_schedule(tasks, cost, ["n1", "n2"])
+    risky = heft_schedule(tasks, cost, ["n1", "n2"], uncertainty=unc,
+                          risk_k=2.0)
+    assert plain["assignment"]["a"] == "n1"
+    assert risky["assignment"]["a"] == "n2"
+
+
+def test_elastic_reschedule_drops_dead_nodes():
+    rng = np.random.default_rng(0)
+    tasks, cost, nodes = _random_dag(rng, 8, 3)
+    done = {"t0", "t1"}
+    s = reschedule_elastic(tasks, cost, nodes[:2], done)
+    assert set(s["assignment"]) == set(tasks) - done
+    assert all(n in nodes[:2] for n in s["assignment"].values())
+
+
+def test_detect_stragglers_threshold():
+    records = [{"id": "a", "node": "n", "duration": 10.0},
+               {"id": "b", "node": "n", "duration": 30.0}]
+    preds = {"a": (9.0, 1.0), "b": (9.0, 1.0)}
+    out = detect_stragglers(records, preds, k=3.0)
+    assert out == ["b"]

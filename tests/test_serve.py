@@ -1,0 +1,27 @@
+"""Serving loop: batching, cache stepping, straggler envelope."""
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.launch.serve import Request, ServeLoop
+
+
+def test_serve_loop_generates():
+    cfg = smoke_config("stablelm-1.6b")
+    loop = ServeLoop(cfg, max_batch=2)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 6), max_new=4)
+            for i in range(2)]
+    done = loop.run_batch(reqs)
+    for r in done:
+        assert len(r.out) == 4
+        assert all(0 <= t < cfg.vocab for t in r.out)
+
+
+def test_serve_straggler_envelope_counts():
+    cfg = smoke_config("qwen2-7b")
+    # impossible envelope: every step counts as a straggler breach
+    loop = ServeLoop(cfg, max_batch=1, envelope=(0.0, 1e-9), straggler_k=1.0)
+    rng = np.random.default_rng(1)
+    loop.run_batch([Request(rid=0, prompt=rng.integers(0, cfg.vocab, 4),
+                            max_new=5)])
+    assert loop.straggler_steps >= 3

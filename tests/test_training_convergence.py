@@ -1,0 +1,38 @@
+"""End-to-end learning: a small LM on the synthetic stream must collapse
+well below the uniform baseline within a few dozen steps (validates the
+loss path, optimizer, schedule and data jointly)."""
+import math
+
+import jax
+
+from repro.data import SyntheticLMData
+from repro.launch.steps import make_train_step
+from repro.models import AxisRules, ModelConfig, build_model
+from repro.models.common import tree_defs_init
+from repro.optim import AdamWConfig, state_defs
+
+
+def test_small_lm_learns():
+    rules = AxisRules(fsdp_axes=(), dp_axes=())
+    cfg = ModelConfig(arch="conv-test", family="dense", n_layers=2,
+                      d_model=128, n_heads=4, n_kv_heads=4, d_ff=512,
+                      vocab=2048, head_dim=32, norm="rmsnorm", act="swiglu",
+                      attn_chunk=64, xent_chunk=64, remat="full")
+    model = build_model(cfg)
+    opt = AdamWConfig(lr=2e-3, warmup_steps=5, total_steps=100,
+                      schedule="constant")
+    params = model.init(jax.random.PRNGKey(0))
+    state = tree_defs_init(state_defs(model.param_defs, opt),
+                           jax.random.PRNGKey(1))
+    data = SyntheticLMData(cfg, seq=64, global_batch=8, seed=0)
+    step = jax.jit(make_train_step(model, rules, opt), donate_argnums=(0, 1))
+    first = None
+    for i in range(40):
+        params, state, m = step(params, state, data.batch(i))
+        if first is None:
+            first = float(m["loss"])
+    last = float(m["loss"])
+    uniform = math.log(cfg.vocab)
+    assert first > uniform - 1.0          # starts near uniform
+    assert last < first - 1.5, (first, last)   # collapsed by >1.5 nats
+    assert last < uniform - 1.0           # clearly below uniform
