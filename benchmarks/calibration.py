@@ -43,21 +43,39 @@ def run(n_draws: int = 5) -> list[tuple]:
         est.fit_tasks([t.name for t in tasks], size,
                       lambda n, s, cf: sim.run_task(by_name[n], local, s,
                                                     cpu_factor=cf))
-        for t in tasks:
-            for node in target_nodes():
-                mean, std = est.predict(t.name, node.name, size)
+        # one batched call per workflow for the (task x node) matrix, then
+        # vectorised Student-t quantiles — no per-(task, node, draw) ppf
+        node_types = list(target_nodes())
+        task_idx = {n: i for i, n in enumerate(est.task_names())}
+        mean_mat, std_mat = est.predict_matrix([n.name for n in node_types],
+                                               size)
+        dof = np.array([(float(est.tasks[t.name].model.post.dof)
+                         if est.tasks[t.name].model.correlated else 6.0)
+                        for t in tasks])
+        means, stds, dofs, actuals = [], [], [], []
+        for t in tasks:                    # same truth-sim call order as the
+            ti = task_idx[t.name]          # scalar path (RNG stream intact)
+            for nj, node in enumerate(node_types):
+                mean, std = mean_mat[ti, nj], std_mat[ti, nj]
                 if std <= 0:
                     continue
-                ft = est.tasks[t.name]
-                dof = (float(ft.model.post.dof)
-                       if ft.model.correlated else 6.0)
-                widths.append(std / max(mean, 1e-9))
-                for _ in range(n_draws):
-                    actual = truth.run_task(t, node, size)
-                    for lv in LEVELS:
-                        tq = sstats.t.ppf(0.5 + lv / 2.0, df=dof)
-                        lo, hi = mean - tq * std, mean + tq * std
-                        cover[lv].append(lo <= actual <= hi)
+                means.append(mean)
+                stds.append(std)
+                dofs.append(dof[ti])
+                actuals.append([truth.run_task(t, node, size)
+                                for _ in range(n_draws)])
+        if not means:
+            continue
+        means = np.array(means)            # (P,)
+        stds = np.array(stds)
+        dofs = np.array(dofs)
+        A = np.array(actuals)              # (P, draws)
+        widths.extend(stds / np.maximum(means, 1e-9))
+        for lv in LEVELS:
+            tq = sstats.t.ppf(0.5 + lv / 2.0, df=dofs)          # (P,)
+            lo = (means - tq * stds)[:, None]
+            hi = (means + tq * stds)[:, None]
+            cover[lv].extend(((lo <= A) & (A <= hi)).reshape(-1))
 
     rows = []
     print(f"{'nominal':>8s} {'empirical':>10s} {'n':>6s}")

@@ -57,14 +57,21 @@ def run(n_samples: int = 8, nodes_per_type: int = 2) -> list[tuple]:
             node_type[nm] = nt
 
     tasks = _build_dag(n_samples)
+    # one batched call for the full (task x node-type) estimate matrix,
+    # expanded to node instances by indexing — no per-pair predict loop
+    type_names = [nt.name for nt in target_nodes()]
+    type_idx = {n: j for j, n in enumerate(type_names)}
+    task_idx = {n: i for i, n in enumerate(est.task_names())}
+    mean_mat, std_mat = est.predict_matrix(type_names, size)
     cost, unc, true_cost = {}, {}, {}
     for tid in tasks:
         tname = tid.split(".", 1)[1]
+        ti = task_idx[tname]
         cost[tid], unc[tid], true_cost[tid] = {}, {}, {}
         for nm in node_names:
-            mean, std = est.predict(tname, node_type[nm].name, size)
-            cost[tid][nm] = mean
-            unc[tid][nm] = std
+            nj = type_idx[node_type[nm].name]
+            cost[tid][nm] = mean_mat[ti, nj]
+            unc[tid][nm] = std_mat[ti, nj]
             true_cost[tid][nm] = truth.run_task(by_name[tname],
                                                 node_type[nm], size)
 
@@ -117,8 +124,11 @@ def run(n_samples: int = 8, nodes_per_type: int = 2) -> list[tuple]:
     print(f"  lotaru-vs-oracle gap: {gap:.3f}x; speedup over RR: {speedup:.2f}x")
 
     # straggler mitigation: one node type is secretly 5x slow for 10% tasks
-    preds = {tid: est.predict(tid.split('.', 1)[1], node_type[
-        heft_lotaru['assignment'][tid]].name, size) for tid in tasks}
+    preds = {tid: (mean_mat[task_idx[tid.split('.', 1)[1]],
+                            type_idx[node_type[heft_lotaru['assignment'][tid]].name]],
+                   std_mat[task_idx[tid.split('.', 1)[1]],
+                           type_idx[node_type[heft_lotaru['assignment'][tid]].name]])
+             for tid in tasks}
     rng = np.random.default_rng(3)
 
     def true_rt_straggle(tid, node):

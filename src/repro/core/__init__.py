@@ -2,10 +2,13 @@
 system — infrastructure profiling, downsampled local execution, Bayesian
 linear regression with Pearson gating, per-node factor adjustment — plus
 the accelerator-plane integration (LotaruML) that feeds the scheduler."""
-from .blr import (BLRPosterior, TaskModel, fit, fit_task, pearson, predict,
-                  predict_interval, CORRELATION_THRESHOLD)
-from .adjust import (cpu_weight, deviation, roofline_weights, runtime_factor,
-                     runtime_factor3)
+from .blr import (BatchedTaskModel, BLRPosterior, TaskModel, fit, fit_batch,
+                  fit_task, fit_task_batch, pearson, pearson_batch, predict,
+                  predict_batch, predict_batch_grid, predict_interval,
+                  predict_task_batch, predict_task_batch_grid,
+                  stack_task_models, CORRELATION_THRESHOLD)
+from .adjust import (BenchArrays, cpu_weight, deviation, roofline_weights,
+                     runtime_factor, runtime_factor3, stack_benches)
 from .baselines import BASELINES, NaiveEstimator, OnlineM, OnlineP
 from .downsample import (WorkloadPartition, downsample_workload,
                          partition_sizes, reduced_model_factor)
@@ -15,8 +18,12 @@ from .nodes import NODE_TYPES, NodeType, PAPER_ALIAS, get_node, target_nodes
 from .profiler import BenchResult, profile_cluster, profile_local, profile_node
 
 __all__ = [
-    "BLRPosterior", "TaskModel", "fit", "fit_task", "pearson", "predict",
-    "predict_interval", "CORRELATION_THRESHOLD", "cpu_weight", "deviation",
+    "BatchedTaskModel", "BLRPosterior", "TaskModel", "fit", "fit_batch",
+    "fit_task", "fit_task_batch", "pearson", "pearson_batch", "predict",
+    "predict_batch", "predict_batch_grid", "predict_interval",
+    "predict_task_batch", "predict_task_batch_grid", "stack_task_models",
+    "CORRELATION_THRESHOLD", "BenchArrays", "stack_benches",
+    "cpu_weight", "deviation",
     "roofline_weights", "runtime_factor", "runtime_factor3", "BASELINES",
     "NaiveEstimator", "OnlineM", "OnlineP", "WorkloadPartition",
     "downsample_workload", "partition_sizes", "reduced_model_factor",

@@ -14,19 +14,33 @@ come from.
 
 Features are 1D (uncompressed input size / token count) plus an intercept;
 everything is closed-form, tiny, and jit-able.
+
+The batched engine: HEFT-class consumers need estimates for every
+(task x node) pair, so all T per-task posteriors are fitted in ONE vmapped
+closed-form solve (``fit_batch`` / ``fit_task_batch``; ragged sample counts
+are handled by zeroing masked design rows so they contribute nothing to
+X^T X, X^T y or n) and queried with a batched Student-t predictive
+(``predict_batch`` returns (T,), ``predict_batch_grid`` returns (T, S)).
+The scalar ``fit`` / ``predict`` are thin wrappers over the same core.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from scipy import stats as _scipy_stats
+
+
+def _default_dtype():
+    return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
 
 
 @dataclass(frozen=True)
 class BLRPosterior:
-    mu: jnp.ndarray          # (d,) posterior mean of weights
+    mu: jnp.ndarray          # (d,) posterior mean of weights; (T, d) batched
     V: jnp.ndarray           # (d, d) posterior covariance factor
     a: jnp.ndarray           # shape of InvGamma
     b: jnp.ndarray           # scale of InvGamma
@@ -42,61 +56,134 @@ class BLRPosterior:
         return self.b / jnp.maximum(self.a - 1.0, 1e-6)
 
 
+jax.tree_util.register_dataclass(
+    BLRPosterior,
+    data_fields=["mu", "V", "a", "b", "x_scale", "y_scale"],
+    meta_fields=[])
+
+
 def _design(x: jnp.ndarray, x_scale) -> jnp.ndarray:
     x = jnp.atleast_1d(x) / x_scale
     return jnp.stack([jnp.ones_like(x), x], axis=-1)
 
 
+def _fit_core(x, y, mask, prior_scale, a0, b0):
+    """Closed-form NIG update over one task's (possibly padded) samples.
+
+    ``mask`` rows set to 0 contribute nothing: the design row, the target
+    and the effective sample count all vanish, so a padded batch solve is
+    exactly the ragged per-task solve.
+    """
+    xm = x * mask
+    ym = y * mask
+    x_scale = jnp.maximum(jnp.max(jnp.abs(xm)), 1e-12)
+    y_scale = jnp.maximum(jnp.max(jnp.abs(ym)), 1e-12)
+    X = jnp.stack([mask, xm / x_scale], axis=-1)        # masked design rows
+    yn = ym / y_scale
+    n = jnp.sum(mask)
+    d = 2
+    V0_inv = jnp.eye(d, dtype=x.dtype) / (prior_scale ** 2)
+    Vn_inv = V0_inv + X.T @ X
+    Vn = jnp.linalg.inv(Vn_inv)
+    mun = Vn @ (X.T @ yn)                               # mu0 = 0
+    an = a0 + n / 2.0
+    resid = yn - X @ mun
+    bn = jnp.maximum(b0 + 0.5 * (resid @ yn), 1e-12)
+    return mun, Vn, an, bn, x_scale, y_scale
+
+
 def fit(x: jnp.ndarray, y: jnp.ndarray, *, prior_scale: float = 10.0,
         a0: float = 1.0, b0: float = 1.0) -> BLRPosterior:
     """Fit runtime ~ input_size.  x, y: (n,) fp arrays (n may be tiny)."""
-    x = jnp.asarray(x, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+    x = jnp.asarray(x, _default_dtype())
     y = jnp.asarray(y, x.dtype)
-    x_scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
-    y_scale = jnp.maximum(jnp.max(jnp.abs(y)), 1e-12)
-    X = _design(x, x_scale)                      # (n, 2)
-    yn = y / y_scale
-    n, d = X.shape
-    V0_inv = jnp.eye(d) / (prior_scale ** 2)
-    mu0 = jnp.zeros(d)
-    Vn_inv = V0_inv + X.T @ X
-    Vn = jnp.linalg.inv(Vn_inv)
-    mun = Vn @ (V0_inv @ mu0 + X.T @ yn)
-    an = a0 + n / 2.0
-    resid = yn - X @ mun
-    bn = b0 + 0.5 * (resid @ yn + (mu0 - mun) @ (V0_inv @ mu0))
-    bn = jnp.maximum(bn, 1e-12)
+    mun, Vn, an, bn, xs, ys = _fit_core(x, y, jnp.ones_like(x),
+                                        prior_scale, a0, b0)
     return BLRPosterior(mu=mun, V=Vn, a=jnp.asarray(an), b=bn,
-                        x_scale=x_scale, y_scale=y_scale)
+                        x_scale=xs, y_scale=ys)
+
+
+def fit_batch(x, y, mask=None, *, prior_scale: float = 10.0,
+              a0: float = 1.0, b0: float = 1.0) -> BLRPosterior:
+    """Fit T independent BLRs in one vmapped solve.
+
+    x, y: (T, n) padded sample arrays; mask: (T, n) validity (1 = real
+    sample, 0 = padding).  Returns a ``BLRPosterior`` whose fields carry a
+    leading (T,) batch axis.
+    """
+    x = jnp.asarray(x, _default_dtype())
+    y = jnp.asarray(y, x.dtype)
+    mask = jnp.ones_like(x) if mask is None else jnp.asarray(mask, x.dtype)
+    solve = jax.vmap(partial(_fit_core, prior_scale=prior_scale,
+                             a0=a0, b0=b0))
+    mun, Vn, an, bn, xs, ys = solve(x, y, mask)
+    return BLRPosterior(mu=mun, V=Vn, a=an, b=bn, x_scale=xs, y_scale=ys)
+
+
+def _predict_core(mu, V, a, b, x_scale, y_scale, x_star):
+    """Student-t predictive mean/std for one posterior; x_star any shape."""
+    X = jnp.stack([jnp.ones_like(x_star), x_star / x_scale], axis=-1)
+    mean = X @ mu
+    s2 = (b / a) * (1.0 + jnp.einsum("...i,ij,...j->...", X, V, X))
+    dof = 2.0 * a
+    var = s2 * dof / jnp.maximum(dof - 2.0, 1e-6)   # Student-t variance
+    return mean * y_scale, jnp.sqrt(jnp.maximum(var, 0.0)) * y_scale
 
 
 def predict(post: BLRPosterior, x_star) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Posterior predictive mean and standard deviation at x_star."""
-    Xs = _design(jnp.asarray(x_star, jnp.float32), post.x_scale)
-    mean = Xs @ post.mu
-    s2 = (post.b / post.a) * (1.0 + jnp.einsum("...i,ij,...j->...", Xs, post.V, Xs))
-    dof = post.dof
-    var = s2 * dof / jnp.maximum(dof - 2.0, 1e-6)   # Student-t variance
-    mean = mean * post.y_scale
-    std = jnp.sqrt(jnp.maximum(var, 0.0)) * post.y_scale
+    xs = jnp.atleast_1d(jnp.asarray(x_star, post.mu.dtype))
+    mean, std = _predict_core(post.mu, post.V, post.a, post.b,
+                              post.x_scale, post.y_scale, xs)
     if jnp.ndim(x_star) == 0:
         return mean.reshape(())[()], std.reshape(-1)[0]
     return mean, std
 
 
+def predict_batch(post: BLRPosterior, x_star):
+    """Batched predictive at one point per task.
+
+    ``post`` carries a leading (T,) axis (from ``fit_batch``); ``x_star`` is
+    a scalar (broadcast to every task) or a (T,) array.  Returns (T,) mean
+    and std.
+    """
+    x = jnp.broadcast_to(jnp.asarray(x_star, post.mu.dtype), post.a.shape)
+    return jax.vmap(_predict_core)(post.mu, post.V, post.a, post.b,
+                                   post.x_scale, post.y_scale, x)
+
+
+def predict_batch_grid(post: BLRPosterior, xs):
+    """Batched predictive on a shared grid: xs (S,) -> (T, S) mean/std."""
+    x = jnp.asarray(xs, post.mu.dtype)
+    return jax.vmap(_predict_core,
+                    in_axes=(0, 0, 0, 0, 0, 0, None))(
+        post.mu, post.V, post.a, post.b, post.x_scale, post.y_scale, x)
+
+
 def predict_interval(post: BLRPosterior, x_star, confidence: float = 0.5):
-    """Equal-tailed predictive interval via the Student-t quantile."""
-    from scipy import stats
-    mean, _ = predict(post, x_star)
-    Xs = _design(jnp.asarray(x_star, jnp.float32), post.x_scale)
-    scale = jnp.sqrt((post.b / post.a)
-                     * (1.0 + jnp.einsum("...i,ij,...j->...", Xs, post.V, Xs)))
-    tq = stats.t.ppf(0.5 + confidence / 2.0, df=float(post.dof))
-    half = tq * scale * post.y_scale
-    lo, hi = mean - half, mean + half
-    if np.ndim(x_star) == 0:
-        return (np.float64(np.asarray(lo).reshape(-1)[0]),
-                np.float64(np.asarray(hi).reshape(-1)[0]))
+    """Equal-tailed predictive interval via the Student-t quantile.
+
+    Vectorised: works on a scalar posterior with scalar/vector x_star, and
+    on batched posteriors (leading (T,) axis) without a Python loop.
+    """
+    batched = jnp.ndim(post.a) > 0
+    if batched:
+        mean, _ = predict_batch(post, x_star)
+        xq = jnp.broadcast_to(jnp.asarray(x_star, post.mu.dtype),
+                              post.a.shape)
+        X = jnp.stack([jnp.ones_like(xq), xq / post.x_scale], axis=-1)
+        quad = jnp.einsum("ti,tij,tj->t", X, post.V, X)
+    else:
+        mean, _ = predict(post, x_star)
+        X = _design(jnp.asarray(x_star, post.mu.dtype), post.x_scale)
+        quad = jnp.einsum("...i,ij,...j->...", X, post.V, X)
+    scale = np.asarray(jnp.sqrt((post.b / post.a) * (1.0 + quad)))
+    tq = _scipy_stats.t.ppf(0.5 + confidence / 2.0, df=np.asarray(post.dof))
+    half = tq * scale * np.asarray(post.y_scale)
+    lo = np.asarray(mean) - half
+    hi = np.asarray(mean) + half
+    if np.ndim(x_star) == 0 and not batched:
+        return (np.float64(lo.reshape(-1)[0]), np.float64(hi.reshape(-1)[0]))
     return lo, hi
 
 
@@ -110,6 +197,19 @@ def pearson(x, y) -> float:
     if denom == 0:
         return 0.0
     return float((xd * yd).sum() / denom)
+
+
+def pearson_batch(x, y, mask=None) -> np.ndarray:
+    """Vectorised Pearson over (T, n) rows with an optional validity mask."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    m = np.ones_like(x) if mask is None else np.asarray(mask, np.float64)
+    n = np.maximum(m.sum(axis=-1), 1.0)
+    xd = (x - (x * m).sum(axis=-1, keepdims=True) / n[..., None]) * m
+    yd = (y - (y * m).sum(axis=-1, keepdims=True) / n[..., None]) * m
+    denom = np.sqrt((xd ** 2).sum(axis=-1) * (yd ** 2).sum(axis=-1))
+    num = (xd * yd).sum(axis=-1)
+    return np.where(denom == 0, 0.0, num / np.where(denom == 0, 1.0, denom))
 
 
 CORRELATION_THRESHOLD = 0.8   # paper: "significant if p greater than 0.8"
@@ -152,3 +252,119 @@ def fit_task(sizes, runtimes, *, threshold: float = CORRELATION_THRESHOLD) -> Ta
                      median=float(np.median(runtimes)),
                      spread=float(1.4826 * np.median(
                          np.abs(runtimes - np.median(runtimes))) + 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# Batched per-task models (BLR + median fallback) — one vmapped solve
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class BatchedTaskModel:
+    """T per-task predictors fitted at once; Pearson gating vectorised.
+
+    ``post`` is a batched ``BLRPosterior`` (leading (T,) axis).  Tasks whose
+    size-runtime correlation fails the gate fall back to (median, spread)
+    exactly like the scalar ``TaskModel``.
+    """
+    correlated: jnp.ndarray     # (T,) bool
+    post: BLRPosterior          # batched fields, (T, ...)
+    median: jnp.ndarray         # (T,)
+    spread: jnp.ndarray         # (T,)
+
+
+jax.tree_util.register_dataclass(
+    BatchedTaskModel,
+    data_fields=["correlated", "post", "median", "spread"],
+    meta_fields=[])
+
+
+def fit_task_batch(sizes_list, runtimes_list, *,
+                   threshold: float = CORRELATION_THRESHOLD) -> BatchedTaskModel:
+    """Fit all T tasks in one vmapped closed-form solve.
+
+    ``sizes_list`` / ``runtimes_list``: length-T sequences of per-task 1-D
+    sample arrays; ragged sample counts are padded and masked out of the
+    design, so the result matches T scalar ``fit_task`` calls.
+    """
+    T = len(sizes_list)
+    if T == 0:
+        raise ValueError("fit_task_batch needs at least one task")
+    nmax = max(len(np.atleast_1d(s)) for s in sizes_list)
+    X = np.zeros((T, nmax))
+    Y = np.zeros((T, nmax))
+    M = np.zeros((T, nmax))
+    for i, (s, r) in enumerate(zip(sizes_list, runtimes_list)):
+        s = np.atleast_1d(np.asarray(s, np.float64))
+        r = np.atleast_1d(np.asarray(r, np.float64))
+        if len(s) != len(r):
+            raise ValueError(
+                f"task {i}: {len(s)} sizes vs {len(r)} runtimes — padding "
+                "would silently count zeros as real samples")
+        X[i, :len(s)] = s
+        Y[i, :len(r)] = r
+        M[i, :len(s)] = 1.0
+    p = pearson_batch(X, Y, M)
+    counts = M.sum(axis=-1)
+    correlated = (p > threshold) & (counts >= 2)
+    post = fit_batch(X, Y, M)
+    Yv = np.where(M > 0, Y, np.nan)
+    med = np.nanmedian(Yv, axis=-1)
+    spread = 1.4826 * np.nanmedian(np.abs(Yv - med[:, None]), axis=-1) + 1e-12
+    dt = post.mu.dtype
+    return BatchedTaskModel(correlated=jnp.asarray(correlated),
+                            post=post,
+                            median=jnp.asarray(med, dt),
+                            spread=jnp.asarray(spread, dt))
+
+
+def stack_task_models(models) -> BatchedTaskModel:
+    """Stack already-fitted scalar ``TaskModel``s into the batched container
+    (posterior-exact: no refit; uncorrelated slots get inert placeholders)."""
+    dt = _default_dtype()
+    d = 2
+    mus, Vs, As, Bs, xs, ys = [], [], [], [], [], []
+    for m in models:
+        if m.post is not None:
+            mus.append(np.asarray(m.post.mu, np.float64))
+            Vs.append(np.asarray(m.post.V, np.float64))
+            As.append(float(m.post.a))
+            Bs.append(float(m.post.b))
+            xs.append(float(m.post.x_scale))
+            ys.append(float(m.post.y_scale))
+        else:
+            mus.append(np.zeros(d))
+            Vs.append(np.eye(d))
+            As.append(1.5)
+            Bs.append(1.0)
+            xs.append(1.0)
+            ys.append(1.0)
+    post = BLRPosterior(mu=jnp.asarray(np.stack(mus), dt),
+                        V=jnp.asarray(np.stack(Vs), dt),
+                        a=jnp.asarray(As, dt), b=jnp.asarray(Bs, dt),
+                        x_scale=jnp.asarray(xs, dt),
+                        y_scale=jnp.asarray(ys, dt))
+    return BatchedTaskModel(
+        correlated=jnp.asarray([m.correlated for m in models]),
+        post=post,
+        median=jnp.asarray([m.median for m in models], dt),
+        spread=jnp.asarray([m.spread for m in models], dt))
+
+
+def predict_task_batch(model: BatchedTaskModel, x_star):
+    """Batched ``TaskModel.predict``: (T,) mean/std at one point per task.
+
+    ``x_star`` scalar or (T,).  BLR mean is clamped at 0 exactly like the
+    scalar path; uncorrelated tasks return (median, spread).
+    """
+    mean_b, std_b = predict_batch(model.post, x_star)
+    mean = jnp.where(model.correlated, jnp.maximum(mean_b, 0.0), model.median)
+    std = jnp.where(model.correlated, std_b, model.spread)
+    return mean, std
+
+
+def predict_task_batch_grid(model: BatchedTaskModel, xs):
+    """Batched predictive on a shared grid: xs (S,) -> (T, S) mean/std."""
+    mean_b, std_b = predict_batch_grid(model.post, xs)
+    corr = model.correlated[:, None]
+    mean = jnp.where(corr, jnp.maximum(mean_b, 0.0), model.median[:, None])
+    std = jnp.where(corr, std_b, model.spread[:, None])
+    return mean, std

@@ -18,13 +18,70 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .adjust import (cpu_weight, deviation, roofline_weights, runtime_factor,
-                     runtime_factor3)
-from .blr import TaskModel, fit_task
+                     runtime_factor3, stack_benches)
+from .blr import (BatchedTaskModel, TaskModel, fit_task, fit_task_batch,
+                  predict_task_batch, stack_task_models)
 from .downsample import partition_sizes
 from .profiler import BenchResult
+
+
+@jax.jit
+def _scaled_matrix_core(model: BatchedTaskModel, factors, size):
+    """One jitted call: batched Student-t predictive × (T, N) factors."""
+    mean_t, std_t = predict_task_batch(model, size)
+    return mean_t[:, None] * factors, std_t[:, None] * factors
+
+
+@jax.jit
+def _ml_matrix_core(model: BatchedTaskModel, tokens, w_c, has_w,
+                    flops, bytes_, coll, l_mat, l_mem, l_link,
+                    t_mat, t_mem, t_link, is_local, mix):
+    """Jitted (cell × node) estimate matrix for the decomposed predictor.
+
+    Vectorises ``LotaruML.predict`` over both axes: the dual-run
+    per-resource transfer where a compute share is available, the
+    whole-time roofline-ratio transfer elsewhere, identity on the local
+    node.  Shapes: cell arrays (T,), target bench arrays (N,).
+
+    ``LotaruML.predict`` is the scalar oracle for this kernel — keep the
+    two in lock-step (equivalence is test-enforced)."""
+    mean, std = predict_task_batch(model, tokens)              # (T,)
+    l_link_f = jnp.where(l_link > 0, l_link, l_mem / 10)
+    t_link_f = jnp.where(t_link > 0, t_link, t_mem / 10)       # (N,)
+    lc = jnp.stack([flops / (l_mat * 1e9),
+                    bytes_ / (l_mem * 1e9),
+                    coll / (l_link_f * 1e9)], axis=-1)         # (T, 3)
+    # dual-run decomposition: measured compute share splits the local time
+    t_c = w_c * mean
+    rest = (1.0 - w_c) * mean
+    mn = lc[:, 1] + lc[:, 2]
+    t_m = rest * jnp.where(mn > 0, lc[:, 1] / jnp.where(mn > 0, mn, 1.0), 1.0)
+    t_n = rest - t_m
+    parts = jnp.stack([
+        t_c[:, None] * l_mat / jnp.maximum(t_mat, 1e-9)[None, :],
+        t_m[:, None] * l_mem / jnp.maximum(t_mem, 1e-9)[None, :],
+        t_n[:, None] * l_link_f / jnp.maximum(t_link_f, 1e-9)[None, :],
+    ], axis=-1)                                                # (T, N, 3)
+    pred_dual = parts.max(axis=-1) + mix * parts.min(axis=-1)
+    rel = std / jnp.maximum(mean, 1e-12)
+    std_dual = pred_dual * rel[:, None]
+    # whole-time roofline-ratio transfer (no throttle probe)
+    tt = jnp.stack([flops[:, None] / (t_mat[None, :] * 1e9),
+                    bytes_[:, None] / (t_mem[None, :] * 1e9),
+                    coll[:, None] / (t_link_f[None, :] * 1e9)], axis=-1)
+    comb_t = tt.max(axis=-1) + mix * tt.min(axis=-1)
+    comb_l = lc.max(axis=-1) + mix * lc.min(axis=-1)
+    ratio = comb_t / jnp.maximum(comb_l, 1e-12)[:, None]
+    mean_m = jnp.where(has_w[:, None], pred_dual, mean[:, None] * ratio)
+    std_m = jnp.where(has_w[:, None], std_dual, std[:, None] * ratio)
+    mean_m = jnp.where(is_local[None, :], mean[:, None], mean_m)
+    std_m = jnp.where(is_local[None, :], std[:, None], std_m)
+    return mean_m, std_m
 
 
 @dataclass
@@ -45,6 +102,7 @@ class LotaruEstimator:
         self.target_benches = target_benches
         self.freq_reduction = freq_reduction
         self.tasks: dict[str, FittedTask] = {}
+        self._batch_cache: tuple | None = None
 
     # ---- phases 2+3: local downsampled runs + model fit -------------------
     def fit_tasks(self, task_names: list[str], input_size: float,
@@ -64,6 +122,7 @@ class LotaruEstimator:
             model = fit_task(sizes, normal)
             self.tasks[name] = FittedTask(model=model, w=w, sizes=sizes,
                                           runtimes=normal)
+        self._batch_cache = None
 
     # ---- phase 4: adjusted prediction --------------------------------------
     def factor(self, task_name: str, node: str) -> float:
@@ -84,6 +143,58 @@ class LotaruEstimator:
         ft = self.tasks[task_name]
         mean, std = ft.model.predict(size)
         return float(mean), float(std)
+
+    # ---- batched (task × node) matrix API ----------------------------------
+    def _batched(self) -> tuple[list[str], BatchedTaskModel, np.ndarray]:
+        """All T task models stacked into one vmapped fit.
+
+        Cached; invalidated when the task set OR any ``FittedTask`` object
+        changes (identity check, so replacing ``est.tasks[name]`` in place
+        is picked up — the cache holds the refs, keeping ids stable)."""
+        names = list(self.tasks)
+        fts = [self.tasks[n] for n in names]
+        c = self._batch_cache
+        if (c is None or c[0] != names
+                or any(a is not b for a, b in zip(c[1], fts))):
+            model = fit_task_batch([ft.sizes for ft in fts],
+                                   [ft.runtimes for ft in fts])
+            w = np.array([ft.w for ft in fts], np.float64)
+            self._batch_cache = (names, fts, model, w)
+        return (self._batch_cache[0], self._batch_cache[2],
+                self._batch_cache[3])
+
+    def task_names(self) -> list[str]:
+        """Row order of ``predict_matrix`` / ``factor_matrix``."""
+        return list(self.tasks)
+
+    def factor_matrix(self, nodes: list[str]) -> np.ndarray:
+        """(T, N) adjustment factors, rows in ``task_names()`` order."""
+        names, _, w = self._batched()
+        F = np.ones((len(names), len(nodes)))
+        targets = [n for n in nodes if n != self.local_bench.node]
+        if targets:
+            Ft = runtime_factor(w, self.local_bench,
+                                stack_benches([self.target_benches[n]
+                                               for n in targets]))
+            k = 0
+            for j, n in enumerate(nodes):
+                if n != self.local_bench.node:
+                    F[:, j] = Ft[:, k]
+                    k += 1
+        return F
+
+    def predict_matrix(self, nodes: list[str], size):
+        """Full (task × node) estimate matrix in one jitted call.
+
+        ``size`` is a scalar (shared input size) or a (T,) per-task array.
+        Returns (mean, std) arrays of shape (T, N): rows follow
+        ``task_names()``, columns follow ``nodes`` (the local node gets
+        factor 1, matching ``predict_local``)."""
+        _, model, _ = self._batched()
+        F = jnp.asarray(self.factor_matrix(nodes), model.post.mu.dtype)
+        size = jnp.asarray(size, model.post.mu.dtype)
+        mean, std = _scaled_matrix_core(model, F, size)
+        return np.asarray(mean, np.float64), np.asarray(std, np.float64)
 
     # ---- offline reuse (paper §1: "allows for offline scenarios where the
     # learned models are reused for future executions") -----------------
@@ -132,6 +243,8 @@ class FittedCell:
     bytes_: float = 0.0
     coll: float = 0.0
     w_compute: float | None = None  # measured compute share (dual-run probe)
+    tokens: np.ndarray | None = None     # raw local samples (batched refit)
+    runtimes: np.ndarray | None = None
 
 
 class LotaruML:
@@ -153,6 +266,7 @@ class LotaruML:
         self.local_bench = local_bench
         self.target_benches = target_benches
         self.cells: dict[str, FittedCell] = {}
+        self._batch_cache: tuple | None = None
 
     def fit_cell(self, cell: dict,
                  run_local: Callable[[dict, float], float],
@@ -186,7 +300,9 @@ class LotaruML:
         self.cells[name] = FittedCell(
             model=model, weights=weights, full_tokens=int(r["step_tokens"]),
             flops=r["flops_per_device"], bytes_=r["bytes_per_device"],
-            coll=r["coll_bytes_per_device"], w_compute=w_compute)
+            coll=r["coll_bytes_per_device"], w_compute=w_compute,
+            tokens=tokens, runtimes=runtimes)
+        self._batch_cache = None
 
     # ---- helpers -----------------------------------------------------------
     def _terms(self, fc: FittedCell, bench: BenchResult) -> tuple:
@@ -202,7 +318,12 @@ class LotaruML:
     def predict(self, cell_name: str, node: str, tokens: float | None = None):
         """Decomposed (per-resource) prediction: the local measurement
         calibrates an efficiency alpha; each term re-scales by its own
-        benchmark ratio."""
+        benchmark ratio.
+
+        This scalar path is the equivalence oracle for the vectorised
+        ``_ml_matrix_core`` (tests assert they agree): any change to the
+        dual-run split, the link fallback or ``_MIX`` must be mirrored
+        there."""
         fc = self.cells[cell_name]
         tokens = fc.full_tokens if tokens is None else tokens
         mean, std = fc.model.predict(tokens)
@@ -248,6 +369,88 @@ class LotaruML:
         f = runtime_factor3(fc.weights, self.local_bench,
                             self.target_benches[node])
         return float(mean) * f, float(std) * f
+
+    # ---- batched (cell × node) matrix API ----------------------------------
+    def _batched(self):
+        """Stack all cells for the vmapped path.
+
+        Cached; invalidated when the cell set OR any ``FittedCell`` object
+        changes (identity check, like ``LotaruEstimator._batched``).  Cells
+        fitted via ``fit_cell`` carry raw local samples and are refitted in
+        one vmapped solve; cells constructed by hand fall back to
+        posterior-exact stacking of their scalar models."""
+        names = list(self.cells)
+        cells = [self.cells[n] for n in names]
+        c = self._batch_cache
+        if (c is None or c[0] != names
+                or any(a is not b for a, b in zip(c[1], cells))):
+            if all(c.tokens is not None and c.runtimes is not None
+                   for c in cells):
+                model = fit_task_batch([c.tokens for c in cells],
+                                       [c.runtimes for c in cells])
+            else:
+                model = stack_task_models([c.model for c in cells])
+            arrays = {
+                "full_tokens": np.array([c.full_tokens for c in cells],
+                                        np.float64),
+                "flops": np.array([c.flops for c in cells], np.float64),
+                "bytes_": np.array([c.bytes_ for c in cells], np.float64),
+                "coll": np.array([c.coll for c in cells], np.float64),
+                "w_c": np.array([c.w_compute if c.w_compute is not None
+                                 else 0.0 for c in cells], np.float64),
+                "has_w": np.array([c.w_compute is not None for c in cells]),
+                "weights": np.array([c.weights for c in cells], np.float64),
+            }
+            self._batch_cache = (names, cells, model, arrays)
+        return (self._batch_cache[0], self._batch_cache[2],
+                self._batch_cache[3])
+
+    def cell_names(self) -> list[str]:
+        """Row order of ``predict_matrix`` / ``predict_matrix_scalar``."""
+        return list(self.cells)
+
+    def _node_arrays(self, nodes: list[str]):
+        benches = [self.local_bench if n == self.local_bench.node
+                   else self.target_benches[n] for n in nodes]
+        ba = stack_benches(benches)
+        is_local = np.array([n == self.local_bench.node for n in nodes])
+        return ba, is_local
+
+    def predict_matrix(self, nodes: list[str], tokens=None):
+        """Full (cell × node) decomposed estimate matrix, one jitted call.
+
+        ``tokens``: None (each cell's full step tokens), a scalar, or a
+        (T,) per-cell array.  Returns (mean, std) of shape (T, N); rows in
+        ``cell_names()`` order, columns in ``nodes`` order."""
+        _, model, arr = self._batched()
+        toks = arr["full_tokens"] if tokens is None else np.broadcast_to(
+            np.asarray(tokens, np.float64), arr["full_tokens"].shape)
+        ba, is_local = self._node_arrays(nodes)
+        lb = self.local_bench
+        mean, std = _ml_matrix_core(
+            model, jnp.asarray(toks), jnp.asarray(arr["w_c"]),
+            jnp.asarray(arr["has_w"]), jnp.asarray(arr["flops"]),
+            jnp.asarray(arr["bytes_"]), jnp.asarray(arr["coll"]),
+            jnp.asarray(float(lb.matmul_gflops)),
+            jnp.asarray(float(lb.mem_gbps)), jnp.asarray(float(lb.link_gbps)),
+            jnp.asarray(ba.matmul_gflops), jnp.asarray(ba.mem_gbps),
+            jnp.asarray(ba.link_gbps), jnp.asarray(is_local),
+            jnp.asarray(self._MIX))
+        return np.asarray(mean, np.float64), np.asarray(std, np.float64)
+
+    def predict_matrix_scalar(self, nodes: list[str], tokens=None):
+        """Paper-form single-factor (cell × node) matrix (ablation): the
+        vectorised ``runtime_factor3`` over stacked bench arrays."""
+        _, model, arr = self._batched()
+        toks = arr["full_tokens"] if tokens is None else np.broadcast_to(
+            np.asarray(tokens, np.float64), arr["full_tokens"].shape)
+        mean_t, std_t = predict_task_batch(model, jnp.asarray(toks))
+        mean_t = np.asarray(mean_t, np.float64)
+        std_t = np.asarray(std_t, np.float64)
+        ba, is_local = self._node_arrays(nodes)
+        F = runtime_factor3(arr["weights"], self.local_bench, ba)  # (T, N)
+        F = np.where(is_local[None, :], 1.0, F)
+        return mean_t[:, None] * F, std_t[:, None] * F
 
     def straggler_threshold(self, cell_name: str, node: str,
                             k: float = 3.0) -> float:

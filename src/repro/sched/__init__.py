@@ -1,12 +1,15 @@
 from .heft import (SchedTask, detect_stragglers, heft_schedule,
+                   heft_schedule_array, heft_schedule_reference,
                    reschedule_elastic, round_robin_schedule,
-                   simulate_with_stragglers)
+                   simulate_with_stragglers, upward_rank_array)
 from .simulator import (ClusterSimulator, EventSimulator, SimNode,
                         load_dryrun_cells)
 from .workflows import INPUTS, WORKFLOWS, TaskDef, all_experiments
 
 __all__ = ["SchedTask", "detect_stragglers", "heft_schedule",
+           "heft_schedule_array", "heft_schedule_reference",
            "reschedule_elastic", "round_robin_schedule",
-           "simulate_with_stragglers", "ClusterSimulator", "EventSimulator",
+           "simulate_with_stragglers", "upward_rank_array",
+           "ClusterSimulator", "EventSimulator",
            "SimNode", "load_dryrun_cells", "INPUTS", "WORKFLOWS", "TaskDef",
            "all_experiments"]

@@ -92,17 +92,19 @@ def run_evaluation(seed: int = 0, n_partitions: int = 10,
 
         for a in APPROACHES:
             errors[a].setdefault(wf_key, {})
-        for node in targets:
+        # one batched call for the full (task x node) Lotaru estimate matrix
+        # (local node gets factor 1, matching predict_local)
+        node_names = [n.name for n in targets]
+        task_idx = {name: i for i, name in enumerate(est.task_names())}
+        mean_mat, _ = est.predict_matrix(node_names, size)
+        for nj, node in enumerate(targets):
             actual = {t.name: truth_sim.run_task(t, node, size)
                       for t in tasks}
             for a in APPROACHES:
                 errs = []
                 for t in tasks:
                     if a == "lotaru":
-                        if node.name == local.name:
-                            pred, _ = est.predict_local(t.name, size)
-                        else:
-                            pred, _ = est.predict(t.name, node.name, size)
+                        pred = mean_mat[task_idx[t.name], nj]
                     else:
                         pred = float(np.asarray(
                             fitted_baselines[a][t.name].predict(size)).reshape(-1)[0])

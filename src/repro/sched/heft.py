@@ -43,6 +43,78 @@ def _upward_rank(tasks: dict[str, SchedTask], cost: dict[str, dict[str, float]],
     return rank
 
 
+def _topo_order(succ: list[list[int]], pred: list[list[int]]) -> list[int]:
+    """Kahn's algorithm; iterative, so 10k-deep chains don't blow the
+    Python recursion limit like the recursive reference rank does."""
+    indeg = [len(p) for p in pred]
+    queue = [i for i, d in enumerate(indeg) if d == 0]
+    topo: list[int] = []
+    head = 0
+    while head < len(queue):
+        t = queue[head]
+        head += 1
+        topo.append(t)
+        for s in succ[t]:
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                queue.append(s)
+    if len(topo) != len(succ):
+        raise ValueError("task graph contains a cycle")
+    return topo
+
+
+def upward_rank_array(succ: list[list[int]], pred: list[list[int]],
+                      mean_cost: np.ndarray, comm: float = 0.0) -> np.ndarray:
+    """Iterative upward rank over index-based adjacency; (T,) array."""
+    topo = _topo_order(succ, pred)
+    rank = np.zeros(len(succ))
+    for t in reversed(topo):
+        best = 0.0
+        for s in succ[t]:
+            best = max(best, comm + rank[s])
+        rank[t] = mean_cost[t] + best
+    return rank
+
+
+def heft_schedule_array(succ: list[list[int]], pred: list[list[int]],
+                        cost: np.ndarray,
+                        uncertainty: np.ndarray | None = None,
+                        risk_k: float = 0.0) -> dict:
+    """HEFT over a (T, N) cost matrix — the ndarray fast path.
+
+    ``succ`` / ``pred`` are index-based adjacency lists; ``cost[t, n]`` the
+    estimated runtime of task t on node n (``uncertainty`` likewise, used
+    when risk_k > 0: effective cost = mean + risk_k * sigma).  The EFT
+    inner loop is vectorised over the node axis.  Returns index-based
+    arrays: {assignment (T,) int, start (T,), finish (T,), makespan,
+    order (T,) int}."""
+    cost = np.asarray(cost, np.float64)
+    T, N = cost.shape
+    eff = cost
+    if uncertainty is not None and risk_k > 0:
+        eff = cost + risk_k * np.asarray(uncertainty, np.float64)
+    rank = upward_rank_array(succ, pred, cost.mean(axis=1))
+    order = np.argsort(-rank, kind="stable")
+    node_free = np.zeros(N)
+    start = np.zeros(T)
+    finish = np.zeros(T)
+    assignment = np.zeros(T, np.int64)
+    for t in order:
+        ready = 0.0
+        for p in pred[t]:
+            if finish[p] > ready:
+                ready = finish[p]
+        st = np.maximum(node_free, ready)          # (N,)
+        ft = st + eff[t]
+        j = int(np.argmin(ft))
+        assignment[t] = j
+        start[t] = st[j]
+        finish[t] = ft[j]
+        node_free[j] = ft[j]
+    return {"assignment": assignment, "start": start, "finish": finish,
+            "makespan": float(finish.max()) if T else 0.0, "order": order}
+
+
 def heft_schedule(tasks: dict[str, SchedTask],
                   cost: dict[str, dict[str, float]],
                   nodes: list[str],
@@ -52,7 +124,36 @@ def heft_schedule(tasks: dict[str, SchedTask],
 
     risk_k > 0 gives the uncertainty-aware variant: effective cost =
     mean + risk_k * sigma.  Returns {assignment, start, finish, makespan,
-    order}."""
+    order}.  Thin dict wrapper over ``heft_schedule_array``."""
+    ids = list(tasks)
+    if not ids:
+        return {"assignment": {}, "start": {}, "finish": {},
+                "makespan": 0.0, "order": []}
+    idx = {tid: i for i, tid in enumerate(ids)}
+    C = np.array([[cost[t][n] for n in nodes] for t in ids])
+    # only materialise sigma when it will be used: a sparse/partial
+    # uncertainty dict with risk_k == 0 must not be indexed (reference
+    # semantics)
+    U = (np.array([[uncertainty[t][n] for n in nodes] for t in ids])
+         if uncertainty is not None and risk_k > 0 else None)
+    succ = [[idx[s] for s in tasks[t].succ] for t in ids]
+    pred = [[idx[p] for p in tasks[t].pred] for t in ids]
+    r = heft_schedule_array(succ, pred, C, U, risk_k)
+    return {"assignment": {ids[i]: nodes[r["assignment"][i]]
+                           for i in range(len(ids))},
+            "start": {ids[i]: float(r["start"][i]) for i in range(len(ids))},
+            "finish": {ids[i]: float(r["finish"][i]) for i in range(len(ids))},
+            "makespan": r["makespan"],
+            "order": [ids[i] for i in r["order"]]}
+
+
+def heft_schedule_reference(tasks: dict[str, SchedTask],
+                            cost: dict[str, dict[str, float]],
+                            nodes: list[str],
+                            uncertainty: dict[str, dict[str, float]] | None = None,
+                            risk_k: float = 0.0) -> dict:
+    """The original pure-Python dict-of-dicts HEFT, kept as the equivalence
+    oracle for tests and the baseline for benchmarks/bench_predict.py."""
     def eff(tid: str, node: str) -> float:
         c = cost[tid][node]
         if uncertainty is not None and risk_k > 0:

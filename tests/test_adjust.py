@@ -1,5 +1,8 @@
 """Adjustment-factor math (paper eqs. 5-6) properties."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; skip, don't die
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (cpu_weight, deviation, roofline_weights,

@@ -1,0 +1,312 @@
+"""Batched prediction engine: batched-vs-scalar equivalence (ragged sample
+counts, Pearson gating, median fallback), predict_matrix shape/factor
+correctness for both estimators, and array-HEFT vs the dict reference."""
+import numpy as np
+import pytest
+
+from repro.core import blr
+from repro.core.adjust import runtime_factor, runtime_factor3, stack_benches
+from repro.core.estimator import FittedTask, LotaruEstimator, LotaruML
+from repro.core.profiler import BenchResult
+from repro.sched.heft import (SchedTask, heft_schedule, heft_schedule_array,
+                              heft_schedule_reference)
+
+RTOL = 1e-4   # float32 default; the x64 benchmark observes ~1e-15
+
+
+def _ragged_tasks(seed=0, n=7):
+    """Mix of correlated (linear) and flat tasks with ragged sample counts."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        m = int(rng.integers(3, 11))
+        xs = np.sort(rng.uniform(1, 100, m))
+        if i % 3 != 2:
+            ys = (i + 1) * xs + 10 + rng.normal(0, 0.1, m)
+        else:
+            ys = 50 + rng.normal(0, 0.5, m)
+        out.append((xs, np.abs(ys)))
+    return out
+
+
+def test_batched_fit_matches_scalar_ragged():
+    tasks = _ragged_tasks()
+    scalars = [blr.fit_task(x, y) for x, y in tasks]
+    batch = blr.fit_task_batch([t[0] for t in tasks], [t[1] for t in tasks])
+    # gating decisions agree
+    assert list(np.asarray(batch.correlated)) == [m.correlated
+                                                  for m in scalars]
+    for x_star in (5.0, 55.0, 150.0):
+        mb, sb = blr.predict_task_batch(batch, x_star)
+        for i, m in enumerate(scalars):
+            ms, ss = m.predict(x_star)
+            assert float(mb[i]) == pytest.approx(float(ms), rel=RTOL,
+                                                 abs=1e-6)
+            assert float(sb[i]) == pytest.approx(float(ss), rel=RTOL,
+                                                 abs=1e-6)
+
+
+def test_batched_grid_shapes():
+    tasks = _ragged_tasks(seed=1, n=4)
+    batch = blr.fit_task_batch([t[0] for t in tasks], [t[1] for t in tasks])
+    xs = np.array([10.0, 20.0, 40.0])
+    mean, std = blr.predict_task_batch_grid(batch, xs)
+    assert mean.shape == (4, 3) and std.shape == (4, 3)
+    assert bool((np.asarray(std) >= 0).all())
+    # per-task x_star vector
+    mean1, std1 = blr.predict_task_batch(batch, np.full(4, 20.0))
+    assert np.allclose(np.asarray(mean1), np.asarray(mean)[:, 1], rtol=1e-6)
+
+
+def test_batched_interval_no_python_loop():
+    tasks = _ragged_tasks(seed=2, n=5)
+    batch = blr.fit_task_batch([t[0] for t in tasks], [t[1] for t in tasks])
+    lo, hi = blr.predict_interval(batch.post, 25.0, confidence=0.8)
+    assert lo.shape == (5,) and hi.shape == (5,)
+    assert bool((hi >= lo).all())
+    # consistent with the scalar interval on a correlated task
+    post0 = blr.fit(*tasks[0])
+    lo0, hi0 = blr.predict_interval(post0, 25.0, confidence=0.8)
+    assert float(lo[0]) == pytest.approx(float(lo0), rel=1e-3, abs=1e-3)
+    assert float(hi[0]) == pytest.approx(float(hi0), rel=1e-3, abs=1e-3)
+
+
+def test_predict_dtype_follows_posterior():
+    x = np.array([1.0, 2.0, 4.0, 8.0])
+    post = blr.fit(x, 2 * x + 1)
+    mean, _ = blr.predict(post, np.array([3.0, 5.0]))
+    assert mean.dtype == post.mu.dtype
+
+
+def _bench(name, cpu, io, mat=100.0, mem=20.0, link=0.0):
+    return BenchResult(node=name, cpu_events_s=cpu, matmul_gflops=mat,
+                       mem_gbps=mem, io_read_mbps=io, io_write_mbps=io,
+                       link_gbps=link)
+
+
+def test_runtime_factor_stacked_matches_scalar():
+    local = _bench("local", 450.0, 420.0)
+    targets = [_bench(f"n{i}", 150.0 + 100 * i, 200.0 + 50 * i)
+               for i in range(4)]
+    w = np.array([0.0, 0.3, 1.0])
+    F = runtime_factor(w, local, stack_benches(targets))
+    assert F.shape == (3, 4)
+    for i, wi in enumerate(w):
+        for j, t in enumerate(targets):
+            assert F[i, j] == pytest.approx(
+                runtime_factor(float(wi), local, t), rel=1e-12)
+
+
+def test_runtime_factor3_stacked_matches_scalar():
+    local = _bench("local", 450.0, 420.0, mat=90.0, mem=18.0, link=0.0)
+    targets = [_bench(f"n{i}", 200.0, 300.0, mat=1000.0 * (i + 1),
+                      mem=100.0 * (i + 1), link=25.0 * i)  # i=0: link fallback
+               for i in range(3)]
+    W = np.array([[0.6, 0.3, 0.1], [0.1, 0.8, 0.1]])
+    F = runtime_factor3(W, local, stack_benches(targets))
+    assert F.shape == (2, 3)
+    for i in range(2):
+        for j, t in enumerate(targets):
+            assert F[i, j] == pytest.approx(
+                runtime_factor3(tuple(W[i]), local, t), rel=1e-12)
+
+
+def _toy_estimator(n_tasks=6, n_nodes=3, seed=0):
+    rng = np.random.default_rng(seed)
+    local = _bench("local-cpu", 450.0, 420.0)
+    benches = {f"n{j}": _bench(f"n{j}", float(rng.uniform(150, 900)),
+                               float(rng.uniform(100, 900)))
+               for j in range(n_nodes)}
+    est = LotaruEstimator(local, benches)
+    for i in range(n_tasks):
+        sizes = np.geomspace(1, 64, 8)
+        if i % 2 == 0:
+            rts = (i + 1.0) * sizes + 5 + rng.normal(0, 0.05, 8)
+        else:
+            rts = 40 + rng.normal(0, 0.5, 8)
+        est.tasks[f"t{i}"] = FittedTask(model=blr.fit_task(sizes, rts),
+                                        w=float(rng.uniform(0, 1)),
+                                        sizes=sizes, runtimes=np.abs(rts))
+    return est
+
+
+def test_predict_matrix_matches_scalar_and_local_identity():
+    est = _toy_estimator()
+    nodes = list(est.target_benches) + ["local-cpu"]
+    M, S = est.predict_matrix(nodes, 32.0)
+    assert M.shape == (6, len(nodes)) and S.shape == M.shape
+    for i, tn in enumerate(est.task_names()):
+        for j, nd in enumerate(nodes):
+            if nd == "local-cpu":
+                m, s = est.predict_local(tn, 32.0)
+            else:
+                m, s = est.predict(tn, nd, 32.0)
+            assert M[i, j] == pytest.approx(m, rel=RTOL, abs=1e-6)
+            assert S[i, j] == pytest.approx(s, rel=RTOL, abs=1e-6)
+    # local column carries factor exactly 1: matrix mean == local mean
+    j_local = nodes.index("local-cpu")
+    F = est.factor_matrix(nodes)
+    assert np.allclose(F[:, j_local], 1.0)
+
+
+def test_predict_matrix_per_task_sizes():
+    est = _toy_estimator(seed=3)
+    nodes = list(est.target_benches)
+    sizes = np.linspace(4, 64, len(est.tasks))
+    M, _ = est.predict_matrix(nodes, sizes)
+    for i, tn in enumerate(est.task_names()):
+        m, _ = est.predict(tn, nodes[0], float(sizes[i]))
+        assert M[i, 0] == pytest.approx(m, rel=RTOL, abs=1e-6)
+
+
+def _toy_ml(seed=0, n_cells=5):
+    rng = np.random.default_rng(seed)
+    local = _bench("local-cpu", 450.0, 420.0, mat=90.0, mem=18.0)
+    benches = {f"n{j}": _bench(f"n{j}", 200.0, 300.0,
+                               mat=float(rng.uniform(500, 5000)),
+                               mem=float(rng.uniform(100, 900)),
+                               link=float(rng.uniform(0, 60)))
+               for j in range(3)}
+    est = LotaruML(local, benches)
+    for i in range(n_cells):
+        slope = rng.uniform(1e-4, 1e-3)
+        cell = {"arch": f"a{i}", "shape": "s", "roofline": {
+            "step_tokens": 2048 * (i + 1),
+            "compute_s": rng.uniform(0.1, 2), "memory_s": rng.uniform(0.1, 2),
+            "collective_s": rng.uniform(0.0, 1),
+            "flops_per_device": rng.uniform(1e12, 5e13),
+            "bytes_per_device": rng.uniform(1e10, 1e12),
+            "coll_bytes_per_device": rng.uniform(1e8, 1e10)}}
+        throttled = (lambda c, f: slope * f * c["roofline"]["step_tokens"]
+                     * 1.25 + 0.6) if i % 2 == 0 else None
+        est.fit_cell(cell,
+                     lambda c, f: slope * f * c["roofline"]["step_tokens"]
+                     + 0.5 + rng.normal(0, 1e-3),
+                     run_local_throttled=throttled)
+    return est
+
+
+def test_ml_predict_matrix_matches_scalar():
+    est = _toy_ml()
+    nodes = list(est.target_benches) + ["local-cpu"]
+    M, S = est.predict_matrix(nodes)
+    Ms, Ss = est.predict_matrix_scalar(nodes)
+    assert M.shape == (5, 4)
+    for i, cn in enumerate(est.cell_names()):
+        for j, nd in enumerate(nodes):
+            m, s = est.predict(cn, nd)
+            assert M[i, j] == pytest.approx(m, rel=RTOL, abs=1e-6)
+            assert S[i, j] == pytest.approx(s, rel=RTOL, abs=1e-6)
+            m2, s2 = est.predict_scalar(cn, nd)
+            assert Ms[i, j] == pytest.approx(m2, rel=RTOL, abs=1e-6)
+            assert Ss[i, j] == pytest.approx(s2, rel=RTOL, abs=1e-6)
+
+
+def _reference_dag():
+    tasks = {
+        "a": SchedTask(id="a", succ=["b", "c"]),
+        "b": SchedTask(id="b", pred=["a"], succ=["d"]),
+        "c": SchedTask(id="c", pred=["a"], succ=["d"]),
+        "d": SchedTask(id="d", pred=["b", "c"], succ=["e"]),
+        "e": SchedTask(id="e", pred=["d"]),
+        "f": SchedTask(id="f"),          # disconnected
+    }
+    rng = np.random.default_rng(7)
+    nodes = ["n0", "n1", "n2"]
+    cost = {t: {n: float(rng.uniform(1, 50)) for n in nodes} for t in tasks}
+    unc = {t: {n: float(rng.uniform(0, 10)) for n in nodes} for t in tasks}
+    return tasks, cost, unc, nodes
+
+
+def test_array_heft_matches_dict_reference():
+    tasks, cost, unc, nodes = _reference_dag()
+    for u, k in ((None, 0.0), (unc, 1.5)):
+        fast = heft_schedule(tasks, cost, nodes, uncertainty=u, risk_k=k)
+        ref = heft_schedule_reference(tasks, cost, nodes, uncertainty=u,
+                                      risk_k=k)
+        assert fast["assignment"] == ref["assignment"]
+        assert fast["order"] == ref["order"]
+        assert fast["makespan"] == pytest.approx(ref["makespan"], rel=1e-12)
+        for t in tasks:
+            assert fast["start"][t] == pytest.approx(ref["start"][t])
+            assert fast["finish"][t] == pytest.approx(ref["finish"][t])
+
+
+def test_array_heft_random_dags_match_reference():
+    rng = np.random.default_rng(11)
+    for _ in range(20):
+        n_tasks = int(rng.integers(2, 20))
+        n_nodes = int(rng.integers(1, 6))
+        tasks = {f"t{i}": SchedTask(id=f"t{i}") for i in range(n_tasks)}
+        for i in range(n_tasks):
+            for j in range(i + 1, n_tasks):
+                if rng.random() < 0.25:
+                    tasks[f"t{i}"].succ.append(f"t{j}")
+                    tasks[f"t{j}"].pred.append(f"t{i}")
+        nodes = [f"n{k}" for k in range(n_nodes)]
+        cost = {t: {n: float(rng.uniform(1, 100)) for n in nodes}
+                for t in tasks}
+        fast = heft_schedule(tasks, cost, nodes)
+        ref = heft_schedule_reference(tasks, cost, nodes)
+        assert fast["assignment"] == ref["assignment"]
+        assert fast["makespan"] == pytest.approx(ref["makespan"])
+
+
+def test_array_heft_deep_chain_no_recursion_limit():
+    T = 3000
+    tasks = {f"t{i}": SchedTask(id=f"t{i}") for i in range(T)}
+    for i in range(T - 1):
+        tasks[f"t{i}"].succ.append(f"t{i+1}")
+        tasks[f"t{i+1}"].pred.append(f"t{i}")
+    cost = {t: {"a": 1.0, "b": 2.0} for t in tasks}
+    s = heft_schedule(tasks, cost, ["a", "b"])
+    assert s["makespan"] == pytest.approx(float(T))
+    assert all(v == "a" for v in s["assignment"].values())
+
+
+def test_array_heft_rejects_cycles():
+    tasks = {"a": SchedTask(id="a", succ=["b"], pred=["b"]),
+             "b": SchedTask(id="b", succ=["a"], pred=["a"])}
+    cost = {t: {"n": 1.0} for t in tasks}
+    with pytest.raises(ValueError):
+        heft_schedule(tasks, cost, ["n"])
+
+
+def test_fit_task_batch_rejects_length_mismatch():
+    with pytest.raises(ValueError):
+        blr.fit_task_batch([[1.0, 2.0, 3.0]], [[5.0, 6.0]])
+
+
+def test_predict_matrix_cache_sees_in_place_task_replacement():
+    est = _toy_estimator()
+    nodes = list(est.target_benches)
+    M1, _ = est.predict_matrix(nodes, 32.0)
+    name = est.task_names()[0]
+    sizes = np.geomspace(1, 64, 8)
+    rts = 100.0 * sizes + 7.0
+    est.tasks[name] = FittedTask(model=blr.fit_task(sizes, rts), w=0.5,
+                                 sizes=sizes, runtimes=rts)
+    M2, _ = est.predict_matrix(nodes, 32.0)
+    m, _ = est.predict(name, nodes[0], 32.0)
+    assert M2[0, 0] == pytest.approx(m, rel=RTOL)
+    assert not np.allclose(M1[0], M2[0])
+
+
+def test_heft_sparse_uncertainty_ignored_when_risk_zero():
+    tasks, cost, _, nodes = _reference_dag()
+    partial_unc = {"a": {n: 1.0 for n in nodes}}   # sigma for one task only
+    s = heft_schedule(tasks, cost, nodes, uncertainty=partial_unc,
+                      risk_k=0.0)
+    assert set(s["assignment"]) == set(tasks)
+
+
+def test_heft_schedule_array_direct_api():
+    cost = np.array([[3.0, 1.0], [2.0, 5.0], [1.0, 1.0]])
+    succ = [[1], [2], []]
+    pred = [[], [0], [1]]
+    s = heft_schedule_array(succ, pred, cost)
+    assert s["assignment"].shape == (3,)
+    assert s["makespan"] >= cost.min(axis=1).sum() - 1e-9
+    # chain order respected
+    assert s["start"][1] >= s["finish"][0] - 1e-9
+    assert s["start"][2] >= s["finish"][1] - 1e-9

@@ -1,6 +1,8 @@
 """BLR + Pearson gating: unit + hypothesis property tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; skip, don't die
 from hypothesis import given, settings, strategies as st
 
 from repro.core import blr

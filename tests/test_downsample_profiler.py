@@ -1,5 +1,8 @@
 """Downsampling ladder + profiler properties."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; skip, don't die
 from hypothesis import given, settings, strategies as st
 
 from repro.core.downsample import (downsample_workload, partition_sizes,

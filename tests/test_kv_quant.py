@@ -1,6 +1,9 @@
 """int8 KV cache: roundtrip error bounds + attention-quality preservation."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; skip, don't die
 from hypothesis import given, settings, strategies as st
 
 from repro.models.kv_quant import (append_quant_cache,

@@ -1,5 +1,8 @@
 """HEFT + straggler/elastic invariants, with hypothesis over random DAGs."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; skip, don't die
 from hypothesis import given, settings, strategies as st
 
 from repro.sched.heft import (SchedTask, heft_schedule, reschedule_elastic,
