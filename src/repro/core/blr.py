@@ -22,6 +22,17 @@ are handled by zeroing masked design rows so they contribute nothing to
 X^T X, X^T y or n) and queried with a batched Student-t predictive
 (``predict_batch`` returns (T,), ``predict_batch_grid`` returns (T, S)).
 The scalar ``fit`` / ``predict`` are thin wrappers over the same core.
+
+The online engine: conjugacy makes the NIG posterior a function of the
+streamed sufficient statistics (n, Σx, Σy, Σx², Σy², Σxy, max|x|, max|y|),
+so one new (size, runtime) observation is a rank-1 moment update plus an
+O(d²) posterior recompute of the affected row — no refit over the history.
+``fit_task_batch`` stows those statistics (plus the padded raw sample
+buffers that the median fallback needs) in ``BatchedTaskModel.stats``;
+``update_task_batch`` absorbs one observation in a single jitted call that
+is mathematically identical to refitting on the concatenated data, with
+the Pearson gate re-evaluated from the streamed moments.
+``update_task_batch_stream`` scans a whole observation stream.
 """
 from __future__ import annotations
 
@@ -257,23 +268,155 @@ def fit_task(sizes, runtimes, *, threshold: float = CORRELATION_THRESHOLD) -> Ta
 # ---------------------------------------------------------------------------
 # Batched per-task models (BLR + median fallback) — one vmapped solve
 # ---------------------------------------------------------------------------
+class SampleLog:
+    """Host-side mutable raw-sample history of T tasks.
+
+    Only the median/MAD fallback needs the raw samples (order statistics
+    are not a function of fixed-size moments), and it needs exactly one
+    row per update — so the history lives OUTSIDE the traced pytree as
+    plain numpy, mutated in place with amortised-O(1) appends.  This keeps
+    the jitted update free of large buffer scatters and of host↔device
+    syncs for capacity checks.
+
+    The log rides along as a pytree *meta* field; equality/hash are
+    class-level so treedefs (and therefore jit caches) are shared across
+    fits — no jitted function may read its contents.
+    """
+    __slots__ = ("x", "y", "count")
+
+    def __init__(self, x: np.ndarray, y: np.ndarray, count: np.ndarray):
+        self.x = x            # (T, C) float64, padded
+        self.y = y            # (T, C)
+        self.count = count    # (T,) int64
+
+    def __eq__(self, other):
+        return isinstance(other, SampleLog)
+
+    def __hash__(self):
+        return 0
+
+    def append(self, i: int, xv: float, yv: float) -> None:
+        cap = self.x.shape[1]
+        if self.count[i] >= cap:
+            pad = ((0, 0), (0, cap))            # double the capacity
+            self.x = np.pad(self.x, pad)
+            self.y = np.pad(self.y, pad)
+        k = self.count[i]
+        self.x[i, k] = xv
+        self.y[i, k] = yv
+        self.count[i] = k + 1
+
+    def median_spread(self, i: int) -> tuple[float, float]:
+        row = self.y[i, :self.count[i]]
+        med = float(np.median(row))
+        return med, float(1.4826 * np.median(np.abs(row - med)) + 1e-12)
+
+    def copy(self) -> "SampleLog":
+        return SampleLog(self.x.copy(), self.y.copy(), self.count.copy())
+
+
+@dataclass(frozen=True)
+class OnlineStats:
+    """Streamed sufficient statistics of T tasks' (size, runtime) samples.
+
+    ``moments[t] = [n, Σx, Σy, Σx², Σy², Σxy, max|x|, max|y|]`` — one
+    (T, 8) array so the rank-1 update is a single gather + scatter.  The
+    moments determine the NIG posterior exactly (see
+    ``_posterior_from_stats``); ``log`` is the untraced raw history the
+    median fallback reads host-side.
+
+    CAUTION: ``log`` is pytree *meta* with class-level equality, so jitted
+    functions returning a model resurrect whatever log was captured at
+    trace time — always re-attach the live log after a jit boundary
+    (``_attach_log``), and never read ``log`` inside jit.
+    """
+    moments: jnp.ndarray    # (T, 8)
+    log: SampleLog | None = None
+
+    @property
+    def n(self):
+        return self.moments[..., 0]
+
+    @property
+    def x_absmax(self):
+        return self.moments[..., 6]
+
+    @property
+    def y_absmax(self):
+        return self.moments[..., 7]
+
+
+jax.tree_util.register_dataclass(
+    OnlineStats, data_fields=["moments"], meta_fields=["log"])
+
+
+def _stats_from_padded(X, Y, M, dt) -> OnlineStats:
+    """Initial sufficient statistics from the padded (T, C) fit arrays."""
+    xm = np.asarray(X, np.float64) * M
+    ym = np.asarray(Y, np.float64) * M
+    moments = np.stack([
+        M.sum(axis=-1), xm.sum(axis=-1), ym.sum(axis=-1),
+        (xm * xm).sum(axis=-1), (ym * ym).sum(axis=-1),
+        (xm * ym).sum(axis=-1),
+        np.abs(xm).max(axis=-1), np.abs(ym).max(axis=-1)], axis=-1)
+    log = SampleLog(np.asarray(X, np.float64).copy(),
+                    np.asarray(Y, np.float64).copy(),
+                    np.asarray(np.sum(M, axis=-1), np.int64))
+    return OnlineStats(moments=jnp.asarray(moments, dt), log=log)
+
+
+def _attach_log(model: BatchedTaskModel, log: SampleLog) -> BatchedTaskModel:
+    """Re-bind the live host-side log after a jit boundary (see
+    ``OnlineStats``: jit outputs carry the trace-time log object)."""
+    return BatchedTaskModel(
+        correlated=model.correlated, post=model.post, median=model.median,
+        spread=model.spread,
+        stats=OnlineStats(moments=model.stats.moments, log=log))
+
+
+def _posterior_from_stats(m, prior_scale, a0, b0):
+    """One task's NIG posterior from its moment row — the same quantities
+    ``_fit_core`` builds from design rows:  X^T X, X^T y and y^T y are
+    linear in the moments, so the result is mathematically identical to
+    refitting on the full sample history."""
+    n, sx, sy, sxx, syy, sxy = m[0], m[1], m[2], m[3], m[4], m[5]
+    dt = m.dtype
+    x_scale = jnp.maximum(m[6], 1e-12)
+    y_scale = jnp.maximum(m[7], 1e-12)
+    XtX = jnp.array([[n, sx / x_scale],
+                     [sx / x_scale, sxx / (x_scale * x_scale)]], dt)
+    Xty = jnp.array([sy, sxy / x_scale], dt) / y_scale
+    V0_inv = jnp.eye(2, dtype=dt) / (prior_scale ** 2)
+    Vn = jnp.linalg.inv(V0_inv + XtX)
+    mun = Vn @ Xty
+    an = a0 + n / 2.0
+    # resid @ yn = yn·yn − mun·(X^T yn), with yn·yn = Σy² / y_scale²
+    bn = jnp.maximum(b0 + 0.5 * (syy / (y_scale * y_scale) - mun @ Xty),
+                     1e-12)
+    return mun, Vn, an, bn, x_scale, y_scale
+
+
 @dataclass(frozen=True)
 class BatchedTaskModel:
     """T per-task predictors fitted at once; Pearson gating vectorised.
 
     ``post`` is a batched ``BLRPosterior`` (leading (T,) axis).  Tasks whose
     size-runtime correlation fails the gate fall back to (median, spread)
-    exactly like the scalar ``TaskModel``.
+    exactly like the scalar ``TaskModel``.  ``stats`` (when present) are the
+    streamed sufficient statistics that let ``update_task_batch`` absorb new
+    observations without a refit; models assembled from bare posteriors
+    (``stack_task_models``) carry ``stats=None`` and cannot be updated.
     """
     correlated: jnp.ndarray     # (T,) bool
     post: BLRPosterior          # batched fields, (T, ...)
     median: jnp.ndarray         # (T,)
     spread: jnp.ndarray         # (T,)
+    stats: OnlineStats | None = None
 
 
 jax.tree_util.register_dataclass(
     BatchedTaskModel,
-    data_fields=["correlated", "post", "median", "spread"],
+    data_fields=["correlated", "post", "median", "spread", "stats"],
     meta_fields=[])
 
 
@@ -310,10 +453,12 @@ def fit_task_batch(sizes_list, runtimes_list, *,
     med = np.nanmedian(Yv, axis=-1)
     spread = 1.4826 * np.nanmedian(np.abs(Yv - med[:, None]), axis=-1) + 1e-12
     dt = post.mu.dtype
+    stats = _stats_from_padded(X, Y, M, dt)
     return BatchedTaskModel(correlated=jnp.asarray(correlated),
                             post=post,
                             median=jnp.asarray(med, dt),
-                            spread=jnp.asarray(spread, dt))
+                            spread=jnp.asarray(spread, dt),
+                            stats=stats)
 
 
 def stack_task_models(models) -> BatchedTaskModel:
@@ -368,3 +513,131 @@ def predict_task_batch_grid(model: BatchedTaskModel, xs):
     mean = jnp.where(corr, jnp.maximum(mean_b, 0.0), model.median[:, None])
     std = jnp.where(corr, std_b, model.spread[:, None])
     return mean, std
+
+
+def slice_task_model(model: BatchedTaskModel, i: int) -> TaskModel:
+    """One row of a batched model as a scalar ``TaskModel``
+    (posterior-exact: the row is a view of the batched fit, no refit)."""
+    p = model.post
+    return TaskModel(
+        correlated=bool(model.correlated[i]),
+        post=BLRPosterior(mu=p.mu[i], V=p.V[i], a=p.a[i], b=p.b[i],
+                          x_scale=p.x_scale[i], y_scale=p.y_scale[i]),
+        median=float(model.median[i]), spread=float(model.spread[i]))
+
+
+def unstack_task_models(model: BatchedTaskModel) -> list[TaskModel]:
+    """Slice a batched model back into T scalar ``TaskModel``s."""
+    return [slice_task_model(model, i)
+            for i in range(model.correlated.shape[0])]
+
+
+# ---------------------------------------------------------------------------
+# Incremental (online) updates — rank-1 conjugate absorption of one sample
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("prior_scale", "a0", "b0", "threshold"))
+def _update_core(model: BatchedTaskModel, obs,
+                 prior_scale, a0, b0, threshold) -> BatchedTaskModel:
+    """Absorb one observation, packed as ``obs = [row, x, y, med, spr]``.
+
+    A rank-1 moment update plus an O(d²) posterior recompute of the row —
+    functional scatters into the batched arrays, jit-compiled once and
+    scan-friendly (fixed shapes; the row is a traced index).  Packing the
+    five scalars into one vector keeps the hot path at a single
+    host→device transfer (per-scalar ``device_put`` costs ~60µs each).
+    ``med`` / ``spr`` are the row's refreshed median/MAD, computed
+    host-side from the untraced ``SampleLog`` (order statistics are not
+    moments).
+    """
+    i = obs[0].astype(jnp.int32)
+    x, y, med, spr = obs[1], obs[2], obs[3], obs[4]
+    st = model.stats
+    row = st.moments[i]
+    one = jnp.ones_like(x)
+    m = jnp.concatenate([
+        row[:6] + jnp.stack([one, x, y, x * x, y * y, x * y]),
+        jnp.maximum(row[6:], jnp.stack([jnp.abs(x), jnp.abs(y)]))])
+    n = m[0]
+    mun, Vn, an, bn, xs, ys = _posterior_from_stats(m, prior_scale, a0, b0)
+    p = model.post
+    post = BLRPosterior(mu=p.mu.at[i].set(mun), V=p.V.at[i].set(Vn),
+                        a=p.a.at[i].set(an), b=p.b.at[i].set(bn),
+                        x_scale=p.x_scale.at[i].set(xs),
+                        y_scale=p.y_scale.at[i].set(ys))
+    # Pearson gate from the streamed moments (identical to pearson_batch's
+    # centred form: Σ(x-x̄)(y-ȳ) = Σxy − ΣxΣy/n)
+    num = m[5] - m[1] * m[2] / n
+    den2 = (m[3] - m[1] ** 2 / n) * (m[4] - m[2] ** 2 / n)
+    den = jnp.sqrt(jnp.maximum(den2, 0.0))
+    pear = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
+    corr = (pear > threshold) & (n >= 2)
+    return BatchedTaskModel(
+        correlated=model.correlated.at[i].set(corr), post=post,
+        median=model.median.at[i].set(med),
+        spread=model.spread.at[i].set(spr),
+        stats=OnlineStats(moments=st.moments.at[i].set(m), log=st.log))
+
+
+def _require_stats(model: BatchedTaskModel) -> None:
+    if model.stats is None or model.stats.log is None:
+        raise ValueError(
+            "model carries no sufficient statistics (built via "
+            "stack_task_models?) — refit with fit_task_batch to enable "
+            "incremental updates")
+
+
+def update_task_batch(model: BatchedTaskModel, task_idx: int, x, y, *,
+                      prior_scale: float = 10.0, a0: float = 1.0,
+                      b0: float = 1.0,
+                      threshold: float = CORRELATION_THRESHOLD
+                      ) -> BatchedTaskModel:
+    """Absorb one (size, runtime) observation into task ``task_idx``.
+
+    Mathematically identical to ``fit_task_batch`` on the concatenated
+    sample history (same hyperparameters), but O(d²) on the affected row
+    instead of a full refit, with no host↔device sync on the hot path.
+    Returns a new model.  The posterior arrays of the input are unchanged;
+    the raw-sample ``SampleLog`` is shared and mutated in place (treat the
+    input model as consumed, like an optimiser state).
+    """
+    _require_stats(model)
+    log = model.stats.log
+    i = int(task_idx)
+    log.append(i, float(x), float(y))
+    med, spr = log.median_spread(i)
+    # hand jit the raw numpy vector: one transfer, no eager device_put
+    obs = np.array([i, x, y, med, spr], np.float64)
+    return _attach_log(_update_core(model, obs, prior_scale, a0, b0,
+                                    threshold), log)
+
+
+def update_task_batch_stream(model: BatchedTaskModel, task_idx, x, y, *,
+                             prior_scale: float = 10.0, a0: float = 1.0,
+                             b0: float = 1.0,
+                             threshold: float = CORRELATION_THRESHOLD
+                             ) -> BatchedTaskModel:
+    """Scan a whole observation stream through the single-update core.
+
+    ``task_idx`` (S,) int, ``x`` / ``y`` (S,) — the medians are replayed
+    host-side (the log is untraced), then one ``lax.scan`` absorbs the
+    stream, so throughput is not bounded by Python dispatch.
+    """
+    _require_stats(model)
+    task_idx = np.asarray(task_idx, np.int64)
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    log = model.stats.log
+    obs = np.empty((len(task_idx), 5))
+    obs[:, 0] = task_idx
+    obs[:, 1] = x
+    obs[:, 2] = y
+    for k, (i, xv, yv) in enumerate(zip(task_idx, x, y)):
+        log.append(int(i), float(xv), float(yv))
+        obs[k, 3], obs[k, 4] = log.median_spread(int(i))
+    dt = model.post.mu.dtype
+
+    def step(m, o):
+        return _update_core(m, o, prior_scale, a0, b0, threshold), None
+
+    model, _ = jax.lax.scan(step, model, jnp.asarray(obs, dt))
+    return _attach_log(model, log)

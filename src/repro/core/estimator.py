@@ -22,12 +22,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from scipy import stats as _scipy_stats
+
 from .adjust import (cpu_weight, deviation, roofline_weights, runtime_factor,
                      runtime_factor3, stack_benches)
 from .blr import (BatchedTaskModel, TaskModel, fit_task, fit_task_batch,
-                  predict_task_batch, stack_task_models)
+                  predict_interval, predict_task_batch, slice_task_model,
+                  stack_task_models, unstack_task_models, update_task_batch)
 from .downsample import partition_sizes
 from .profiler import BenchResult
+
+SCHEMA_VERSION = 2   # LotaruEstimator.save/load on-disk format
 
 
 @jax.jit
@@ -103,14 +108,22 @@ class LotaruEstimator:
         self.freq_reduction = freq_reduction
         self.tasks: dict[str, FittedTask] = {}
         self._batch_cache: tuple | None = None
+        self._mat_cache: dict | None = None    # last (T, N) estimate matrix
+        self._dirty_rows: set[int] = set()     # rows invalidated by observe()
 
     # ---- phases 2+3: local downsampled runs + model fit -------------------
     def fit_tasks(self, task_names: list[str], input_size: float,
                   run_local: Callable[[str, float, float], float],
                   n_partitions: int = 10, slow_partitions: int = 3) -> None:
-        """run_local(task_name, size, cpu_factor) -> measured runtime."""
+        """run_local(task_name, size, cpu_factor) -> measured runtime.
+
+        Collects every (task × partition) measurement first, then fits all
+        T tasks in one vmapped ``fit_task_batch`` solve; the per-task
+        scalar models are posterior-exact slices of that batch, and the
+        batched cache is primed with the same fit (no second solve)."""
         sizes = np.array(partition_sizes(input_size, n_partitions))
         slow_factor = 1.0 - self.freq_reduction          # 20% CPU reduction
+        runs, ws = [], []
         for name in task_names:
             normal = np.array([run_local(name, s, 1.0) for s in sizes])
             # second execution with reduced CPU speed on a few partitions
@@ -118,11 +131,22 @@ class LotaruEstimator:
             slow = np.array([run_local(name, s, slow_factor) for s in sub])
             devs = [deviation(t_new, t_old)
                     for t_new, t_old in zip(slow, normal[:slow_partitions])]
-            w = cpu_weight(float(np.median(devs)), 1.0, slow_factor)
-            model = fit_task(sizes, normal)
+            ws.append(cpu_weight(float(np.median(devs)), 1.0, slow_factor))
+            runs.append(normal)
+        batch = fit_task_batch([sizes] * len(task_names), runs)
+        for name, model, w, normal in zip(task_names,
+                                          unstack_task_models(batch),
+                                          ws, runs):
             self.tasks[name] = FittedTask(model=model, w=w, sizes=sizes,
                                           runtimes=normal)
         self._batch_cache = None
+        self._mat_cache = None
+        self._dirty_rows.clear()
+        names = list(self.tasks)
+        if names == list(task_names):    # batch covers the whole task set
+            fts = [self.tasks[n] for n in names]
+            self._batch_cache = (names, fts, batch,
+                                 np.array(ws, np.float64))
 
     # ---- phase 4: adjusted prediction --------------------------------------
     def factor(self, task_name: str, node: str) -> float:
@@ -189,27 +213,117 @@ class LotaruEstimator:
         ``size`` is a scalar (shared input size) or a (T,) per-task array.
         Returns (mean, std) arrays of shape (T, N): rows follow
         ``task_names()``, columns follow ``nodes`` (the local node gets
-        factor 1, matching ``predict_local``)."""
+        factor 1, matching ``predict_local``).
+
+        The matrix is cached per (nodes, size); ``observe`` invalidates
+        only the observed task's row, so an online re-predict recomputes
+        the dirty rows instead of the whole matrix."""
         _, model, _ = self._batched()
-        F = jnp.asarray(self.factor_matrix(nodes), model.post.mu.dtype)
-        size = jnp.asarray(size, model.post.mu.dtype)
-        mean, std = _scaled_matrix_core(model, F, size)
-        return np.asarray(mean, np.float64), np.asarray(std, np.float64)
+        dt = model.post.mu.dtype
+        key = (tuple(nodes), np.asarray(size, np.float64).tobytes())
+        c = self._mat_cache
+        if c is not None and c["key"] == key and c["model"] is model:
+            rows = sorted(self._dirty_rows)
+            if rows:
+                idx = np.asarray(rows)
+                sub = jax.tree_util.tree_map(lambda a: a[idx], model)
+                sz = size if np.ndim(size) == 0 else np.asarray(size)[idx]
+                mean_r, std_r = _scaled_matrix_core(
+                    sub, jnp.asarray(c["F"][idx], dt), jnp.asarray(sz, dt))
+                c["mean"][idx] = np.asarray(mean_r, np.float64)
+                c["std"][idx] = np.asarray(std_r, np.float64)
+                self._dirty_rows.clear()
+            return c["mean"].copy(), c["std"].copy()
+        F = self.factor_matrix(nodes)
+        mean, std = _scaled_matrix_core(model, jnp.asarray(F, dt),
+                                        jnp.asarray(size, dt))
+        # np.array (not asarray): jax arrays view as read-only buffers and
+        # the cache must stay patchable row-by-row
+        self._mat_cache = {"key": key, "model": model, "F": F,
+                           "mean": np.array(mean, np.float64),
+                           "std": np.array(std, np.float64)}
+        self._dirty_rows.clear()
+        return self._mat_cache["mean"].copy(), self._mat_cache["std"].copy()
+
+    # ---- phase 5 (beyond paper): online estimation ------------------------
+    def observe(self, task_name: str, node: str, size: float,
+                runtime: float) -> float:
+        """Feed one realised (size, runtime) from ``node`` back in.
+
+        The measured runtime is de-adjusted by the node's factor to the
+        local-machine scale, absorbed by the incremental conjugate update
+        (O(d²), no refit), and only the task's row of any cached estimate
+        matrix is invalidated.  Returns the de-adjusted local-equivalent
+        runtime that entered the model."""
+        names, model, _ = self._batched()
+        i = names.index(task_name)
+        f = self.factor(task_name, node)
+        local_rt = float(runtime) / max(float(f), 1e-12)
+        new_model = update_task_batch(model, i, float(size), local_rt)
+        ft = self.tasks[task_name]
+        # keep the raw history on the FittedTask (same object, so the
+        # batched cache's identity check stays valid) — a later full refit
+        # over these arrays reproduces the incremental state
+        ft.sizes = np.append(ft.sizes, float(size))
+        ft.runtimes = np.append(ft.runtimes, local_rt)
+        ft.model = slice_task_model(new_model, i)
+        c = self._batch_cache
+        self._batch_cache = (c[0], c[1], new_model, c[3])
+        if self._mat_cache is not None and self._mat_cache["model"] is model:
+            self._mat_cache["model"] = new_model
+            self._dirty_rows.add(i)
+        else:
+            self._mat_cache = None
+        return local_rt
+
+    def predict_interval_node(self, task_name: str, node: str, size: float,
+                              confidence: float = 0.9) -> tuple[float, float]:
+        """Equal-tailed predictive interval for the task on ``node``.
+
+        Student-t interval (factor-scaled) for correlated tasks; a normal
+        median ± z·spread envelope for the median fallback."""
+        ft = self.tasks[task_name]
+        f = self.factor(task_name, node)
+        if ft.model.correlated:
+            lo, hi = predict_interval(ft.model.post, size, confidence)
+            lo, hi = float(lo), float(hi)
+        else:
+            z = float(_scipy_stats.norm.ppf(0.5 + confidence / 2.0))
+            lo = ft.model.median - z * ft.model.spread
+            hi = ft.model.median + z * ft.model.spread
+        return max(lo * f, 0.0), hi * f
 
     # ---- offline reuse (paper §1: "allows for offline scenarios where the
     # learned models are reused for future executions") -----------------
     def save(self, path) -> None:
+        """Schema v2: persists the fitted posteriors themselves, so a
+        save → load round trip reproduces predictions bit-exactly instead
+        of silently re-fitting with default hyperparameters."""
         import json
         from pathlib import Path
-        out = {"local_bench": self.local_bench.to_dict(),
+        out = {"version": SCHEMA_VERSION,
+               "freq_reduction": self.freq_reduction,
+               "local_bench": self.local_bench.to_dict(),
                "target_benches": {k: v.to_dict()
                                   for k, v in self.target_benches.items()},
                "tasks": {}}
         for name, ft in self.tasks.items():
+            m = ft.model
+            post = None
+            if m.post is not None:
+                post = {"mu": np.asarray(m.post.mu, np.float64).tolist(),
+                        "V": np.asarray(m.post.V, np.float64).tolist(),
+                        "a": float(m.post.a), "b": float(m.post.b),
+                        "x_scale": float(m.post.x_scale),
+                        "y_scale": float(m.post.y_scale)}
             out["tasks"][name] = {
                 "w": ft.w,
                 "sizes": list(map(float, ft.sizes)),
                 "runtimes": list(map(float, ft.runtimes)),
+                "model": {"correlated": bool(m.correlated),
+                          "median": float(m.median),
+                          "spread": float(m.spread),
+                          "post": post},
             }
         Path(path).write_text(json.dumps(out))
 
@@ -217,15 +331,33 @@ class LotaruEstimator:
     def load(cls, path) -> "LotaruEstimator":
         import json
         from pathlib import Path
-        from .blr import fit_task
+        from .blr import BLRPosterior, _default_dtype, fit_task
         d = json.loads(Path(path).read_text())
+        version = d.get("version", 1)
         local = BenchResult(**d["local_bench"])
         targets = {k: BenchResult(**v) for k, v in d["target_benches"].items()}
-        est = cls(local, targets)
+        est = cls(local, targets,
+                  freq_reduction=d.get("freq_reduction", 0.2))
+        dt = _default_dtype()
         for name, rec in d["tasks"].items():
             sizes = np.asarray(rec["sizes"])
             runtimes = np.asarray(rec["runtimes"])
-            est.tasks[name] = FittedTask(model=fit_task(sizes, runtimes),
+            if version >= 2:
+                md = rec["model"]
+                post = None
+                if md["post"] is not None:
+                    p = md["post"]
+                    post = BLRPosterior(
+                        mu=jnp.asarray(p["mu"], dt),
+                        V=jnp.asarray(p["V"], dt),
+                        a=jnp.asarray(p["a"], dt), b=jnp.asarray(p["b"], dt),
+                        x_scale=jnp.asarray(p["x_scale"], dt),
+                        y_scale=jnp.asarray(p["y_scale"], dt))
+                model = TaskModel(correlated=md["correlated"], post=post,
+                                  median=md["median"], spread=md["spread"])
+            else:              # v1 files carried only the raw samples
+                model = fit_task(sizes, runtimes)
+            est.tasks[name] = FittedTask(model=model,
                                          w=rec["w"], sizes=sizes,
                                          runtimes=runtimes)
         return est
@@ -267,6 +399,8 @@ class LotaruML:
         self.target_benches = target_benches
         self.cells: dict[str, FittedCell] = {}
         self._batch_cache: tuple | None = None
+        self._mat_cache: dict | None = None
+        self._dirty_rows: set[int] = set()
 
     def fit_cell(self, cell: dict,
                  run_local: Callable[[dict, float], float],
@@ -416,27 +550,93 @@ class LotaruML:
         is_local = np.array([n == self.local_bench.node for n in nodes])
         return ba, is_local
 
-    def predict_matrix(self, nodes: list[str], tokens=None):
-        """Full (cell × node) decomposed estimate matrix, one jitted call.
-
-        ``tokens``: None (each cell's full step tokens), a scalar, or a
-        (T,) per-cell array.  Returns (mean, std) of shape (T, N); rows in
-        ``cell_names()`` order, columns in ``nodes`` order."""
-        _, model, arr = self._batched()
-        toks = arr["full_tokens"] if tokens is None else np.broadcast_to(
-            np.asarray(tokens, np.float64), arr["full_tokens"].shape)
+    def _matrix_rows(self, model, arr, toks, nodes, row_idx=None):
+        """(mean, std) of ``_ml_matrix_core`` for all rows, or a subset
+        when ``row_idx`` is given (online partial refresh)."""
         ba, is_local = self._node_arrays(nodes)
         lb = self.local_bench
+        sel = (lambda a: a) if row_idx is None else (lambda a: a[row_idx])
+        if row_idx is not None:
+            model = jax.tree_util.tree_map(sel, model)
         mean, std = _ml_matrix_core(
-            model, jnp.asarray(toks), jnp.asarray(arr["w_c"]),
-            jnp.asarray(arr["has_w"]), jnp.asarray(arr["flops"]),
-            jnp.asarray(arr["bytes_"]), jnp.asarray(arr["coll"]),
+            model, jnp.asarray(sel(toks)), jnp.asarray(sel(arr["w_c"])),
+            jnp.asarray(sel(arr["has_w"])), jnp.asarray(sel(arr["flops"])),
+            jnp.asarray(sel(arr["bytes_"])), jnp.asarray(sel(arr["coll"])),
             jnp.asarray(float(lb.matmul_gflops)),
             jnp.asarray(float(lb.mem_gbps)), jnp.asarray(float(lb.link_gbps)),
             jnp.asarray(ba.matmul_gflops), jnp.asarray(ba.mem_gbps),
             jnp.asarray(ba.link_gbps), jnp.asarray(is_local),
             jnp.asarray(self._MIX))
-        return np.asarray(mean, np.float64), np.asarray(std, np.float64)
+        # np.array (not asarray): the row cache patches these in place
+        return np.array(mean, np.float64), np.array(std, np.float64)
+
+    def predict_matrix(self, nodes: list[str], tokens=None):
+        """Full (cell × node) decomposed estimate matrix, one jitted call.
+
+        ``tokens``: None (each cell's full step tokens), a scalar, or a
+        (T,) per-cell array.  Returns (mean, std) of shape (T, N); rows in
+        ``cell_names()`` order, columns in ``nodes`` order.  Cached per
+        (nodes, tokens); ``observe`` dirties only the affected row."""
+        _, model, arr = self._batched()
+        toks = arr["full_tokens"] if tokens is None else np.broadcast_to(
+            np.asarray(tokens, np.float64), arr["full_tokens"].shape)
+        key = (tuple(nodes), toks.tobytes())
+        c = self._mat_cache
+        if c is not None and c["key"] == key and c["model"] is model:
+            rows = sorted(self._dirty_rows)
+            if rows:
+                idx = np.asarray(rows)
+                mean_r, std_r = self._matrix_rows(model, arr, toks, nodes,
+                                                  row_idx=idx)
+                c["mean"][idx] = mean_r
+                c["std"][idx] = std_r
+                self._dirty_rows.clear()
+            return c["mean"].copy(), c["std"].copy()
+        mean, std = self._matrix_rows(model, arr, toks, nodes)
+        self._mat_cache = {"key": key, "model": model,
+                           "mean": mean, "std": std}
+        self._dirty_rows.clear()
+        return mean.copy(), std.copy()
+
+    def observe(self, cell_name: str, node: str, tokens: float,
+                runtime: float) -> float:
+        """Feed one realised (tokens, runtime) from ``node`` back in.
+
+        The decomposed transfer is nonlinear in the local mean, so the
+        measured runtime is de-adjusted by the *implied* factor at the
+        current posterior mean (prediction-on-node / local-mean) — exact
+        for the ratio path, a linearisation for the dual-run path — then
+        absorbed by the incremental conjugate update."""
+        names, model, arr = self._batched()
+        i = names.index(cell_name)
+        fc = self.cells[cell_name]
+        if fc.tokens is None or fc.runtimes is None:
+            raise ValueError(f"cell {cell_name!r} carries no raw local "
+                             "samples; online updates need fit_cell-built "
+                             "cells")
+        m_node, _ = self.predict(cell_name, node, tokens)
+        m_local, _ = fc.model.predict(tokens)
+        if float(m_local) <= 1e-9:
+            # the clamped-at-zero mean makes the transfer un-invertible;
+            # absorbing runtime/f with f ~ 1e12 would drag the posterior
+            # to zero — reject instead of silently corrupting it
+            raise ValueError(
+                f"cell {cell_name!r}: local predictive mean is ~0 at "
+                f"tokens={tokens}; cannot de-adjust the observation")
+        f = float(m_node) / float(m_local)
+        local_rt = float(runtime) / max(f, 1e-12)
+        new_model = update_task_batch(model, i, float(tokens), local_rt)
+        fc.tokens = np.append(fc.tokens, float(tokens))
+        fc.runtimes = np.append(fc.runtimes, local_rt)
+        fc.model = slice_task_model(new_model, i)
+        c = self._batch_cache
+        self._batch_cache = (c[0], c[1], new_model, c[3])
+        if self._mat_cache is not None and self._mat_cache["model"] is model:
+            self._mat_cache["model"] = new_model
+            self._dirty_rows.add(i)
+        else:
+            self._mat_cache = None
+        return local_rt
 
     def predict_matrix_scalar(self, nodes: list[str], tokens=None):
         """Paper-form single-factor (cell × node) matrix (ablation): the

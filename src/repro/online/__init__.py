@@ -1,0 +1,15 @@
+"""Online estimation subsystem (beyond-paper phase 5).
+
+Closes the loop the paper leaves open: incremental conjugate posterior
+updates (``repro.core.blr.update_task_batch``), an observation stream fed
+back through ``LotaruEstimator.observe`` / ``LotaruML.observe``, and an
+event-driven execution engine that interleaves run → observe → re-predict
+→ re-schedule over grid-engine-style heterogeneous nodes.
+"""
+from .buffer import Observation, ObservationBuffer
+from .executor import (ExecutionTrace, OnlineExecutor, TaskRun,
+                       fanout_chain_dag, run_static_and_online)
+
+__all__ = ["Observation", "ObservationBuffer", "ExecutionTrace",
+           "OnlineExecutor", "TaskRun", "fanout_chain_dag",
+           "run_static_and_online"]

@@ -1,0 +1,68 @@
+"""Observation stream for online estimation.
+
+An ``ObservationBuffer`` is the append-only log of realised task runtimes
+that the execution engine feeds back into the estimator: each entry keeps
+both the runtime as measured on the target node and its de-adjusted
+local-machine equivalent (what actually entered the model), so the stream
+can be replayed — ``update_task_batch_stream`` over ``arrays()`` rebuilds
+the estimator state reached online.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Observation:
+    task: str             # abstract task name (the estimator's row)
+    node: str             # node (type) the runtime was measured on
+    size: float           # input size / token count
+    runtime: float        # as measured on `node`
+    local_runtime: float  # de-adjusted by the node factor (model units)
+    time: float = 0.0     # simulation time of the completion
+
+
+class ObservationBuffer:
+    """Append-only stream of ``Observation``s with replay helpers."""
+
+    def __init__(self):
+        self._obs: list[Observation] = []
+
+    def add(self, obs: Observation) -> None:
+        self._obs.append(obs)
+
+    def record(self, task: str, node: str, size: float, runtime: float,
+               local_runtime: float, time: float = 0.0) -> Observation:
+        obs = Observation(task=task, node=node, size=size, runtime=runtime,
+                          local_runtime=local_runtime, time=time)
+        self.add(obs)
+        return obs
+
+    def __len__(self) -> int:
+        return len(self._obs)
+
+    def __iter__(self):
+        return iter(self._obs)
+
+    def __getitem__(self, i):
+        return self._obs[i]
+
+    def count(self, task: str) -> int:
+        return sum(1 for o in self._obs if o.task == task)
+
+    def per_task(self) -> dict[str, list[Observation]]:
+        out: dict[str, list[Observation]] = {}
+        for o in self._obs:
+            out.setdefault(o.task, []).append(o)
+        return out
+
+    def arrays(self, task_index: dict[str, int]):
+        """(task_idx, sizes, local_runtimes) arrays in stream order — the
+        exact input ``update_task_batch_stream`` needs to replay the
+        stream onto a freshly fitted ``BatchedTaskModel``."""
+        idx = np.array([task_index[o.task] for o in self._obs], np.int64)
+        sizes = np.array([o.size for o in self._obs], np.float64)
+        local = np.array([o.local_runtime for o in self._obs], np.float64)
+        return idx, sizes, local

@@ -1,0 +1,271 @@
+"""Event-driven online execution engine (run → observe → re-predict →
+re-schedule).
+
+The closed loop the paper motivates but never builds: a HEFT plan from the
+locally-fitted estimates is executed on grid-engine-style nodes; every
+finished task's realised runtime is fed back through
+``LotaruEstimator.observe`` (incremental conjugate update, O(d²)); and when
+a runtime falls outside its predictive interval — the model was *surprised*
+— the not-yet-started frontier is re-planned with ``heft_schedule_array``
+over the refreshed estimate matrix, with node/task availability floors so
+running work is never disturbed.
+
+The same loop with ``online=False`` executes the static plan with frozen
+predictions, which is the baseline every benchmark compares against.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.sched.heft import SchedTask, heft_schedule_array
+from repro.sched.simulator import GridEngine
+
+from .buffer import ObservationBuffer
+
+
+@dataclass(frozen=True)
+class TaskRun:
+    """One completed task instance with the prediction it was dispatched
+    under (the dispatch-time belief, not hindsight)."""
+    id: str
+    name: str             # abstract task name (estimator row)
+    node: str             # node instance ("type/i")
+    node_type: str
+    start: float
+    end: float
+    runtime: float
+    pred_mean: float
+    pred_std: float
+
+    @property
+    def error(self) -> float:
+        """Paper eq. 7: |predicted - actual| / actual."""
+        return abs(self.pred_mean - self.runtime) / max(self.runtime, 1e-12)
+
+
+@dataclass
+class ExecutionTrace:
+    records: list[TaskRun] = field(default_factory=list)
+    makespan: float = 0.0
+    replans: int = 0
+    surprises: int = 0
+    observations: ObservationBuffer = field(default_factory=ObservationBuffer)
+
+    def errors(self) -> np.ndarray:
+        """Per-task prediction errors in completion order."""
+        return np.array([r.error for r in self.records])
+
+    def cumulative_mpe(self) -> np.ndarray:
+        """Running median prediction error after each completion — the
+        online trajectory (should fall as observations stream in)."""
+        errs = self.errors()
+        return np.array([np.median(errs[:k + 1]) for k in range(len(errs))])
+
+    def final_mpe(self) -> float:
+        errs = self.errors()
+        return float(np.median(errs)) if len(errs) else float("nan")
+
+
+class OnlineExecutor:
+    """Discrete-event loop interleaving execution with estimation.
+
+    Parameters
+    ----------
+    estimator : LotaruEstimator-like (``predict_matrix``, ``observe``,
+        ``predict_interval_node``, ``task_names``)
+    tasks : dict[str, SchedTask] — instance-level DAG
+    task_name : dict[str, str] — instance id → abstract estimator task
+    size : float — the workflow's input size (shared by all instances)
+    grid : GridEngine — concrete node instances of heterogeneous types
+    runtime_fn : (task_id, node_name) → float — ground-truth runtime
+    online : False freezes the initial predictions (static baseline)
+    confidence : predictive-interval mass for the surprise gate
+    risk_k : uncertainty-aware HEFT knob (effective cost = mean + k·sigma)
+    replan_cooldown : minimum completions between two re-plans
+    """
+
+    def __init__(self, estimator, tasks: dict[str, SchedTask],
+                 task_name: dict[str, str], size: float, grid: GridEngine,
+                 runtime_fn, *, online: bool = True,
+                 confidence: float = 0.9, risk_k: float = 0.0,
+                 replan_cooldown: int = 0):
+        self.est = estimator
+        self.tasks = tasks
+        self.task_name = task_name
+        self.size = float(size)
+        self.grid = grid
+        self.runtime_fn = runtime_fn
+        self.online = online
+        self.confidence = confidence
+        self.risk_k = risk_k
+        self.replan_cooldown = replan_cooldown
+        self.node_names = grid.names()
+        # stable node-type column order for the estimate matrix
+        seen: dict[str, None] = {}
+        for n in self.node_names:
+            seen.setdefault(grid.type_of(n).name)
+        self.type_names = list(seen)
+        self._type_idx = {t: j for j, t in enumerate(self.type_names)}
+        self._col = np.array([self._type_idx[grid.type_of(n).name]
+                              for n in self.node_names])
+        self._row = {}   # instance id -> estimator row
+        task_rows = {nm: i for i, nm in enumerate(estimator.task_names())}
+        for tid, nm in task_name.items():
+            self._row[tid] = task_rows[nm]
+
+    # ---- planning ---------------------------------------------------------
+    def _estimates(self):
+        """Current (abstract-task × node-type) mean/std matrices.  After an
+        ``observe`` only the dirty row is recomputed (matrix row cache)."""
+        return self.est.predict_matrix(self.type_names, self.size)
+
+    def _plan(self, unstarted: list[str], t_now: float,
+              ext_finish: dict[str, float]) -> dict[str, list[str]]:
+        """(Re-)plan the not-yet-started frontier; returns per-node queues.
+
+        ``ext_finish`` maps done/running predecessors to their (actual or
+        expected) finish times — they become ``task_ready`` floors, and the
+        grid's busy-until times become ``node_ready`` floors, so the plan
+        never assumes a busy node or an unfinished input."""
+        if not unstarted:
+            return {n: [] for n in self.node_names}
+        mean, std = self._estimates()
+        idx = {tid: i for i, tid in enumerate(unstarted)}
+        succ = [[idx[s] for s in self.tasks[tid].succ if s in idx]
+                for tid in unstarted]
+        pred = [[idx[p] for p in self.tasks[tid].pred if p in idx]
+                for tid in unstarted]
+        rows = np.array([self._row[tid] for tid in unstarted])
+        cost = mean[rows][:, self._col]
+        unc = std[rows][:, self._col] if self.risk_k > 0 else None
+        task_ready = np.array([
+            max((ext_finish.get(p, t_now)
+                 for p in self.tasks[tid].pred if p not in idx),
+                default=t_now)
+            for tid in unstarted])
+        task_ready = np.maximum(task_ready, t_now)
+        sched = heft_schedule_array(
+            succ, pred, cost, unc, self.risk_k,
+            node_ready=self.grid.ready_vector(t_now),
+            task_ready=task_ready)
+        queues: dict[str, list[str]] = {n: [] for n in self.node_names}
+        for i in sched["order"]:
+            queues[self.node_names[sched["assignment"][i]]].append(
+                unstarted[int(i)])
+        return queues
+
+    # ---- the loop ---------------------------------------------------------
+    def run(self) -> ExecutionTrace:
+        trace = ExecutionTrace()
+        done: dict[str, float] = {}
+        expected_finish: dict[str, float] = {}
+        started: set[str] = set()
+        heap: list[tuple[float, int, str, str]] = []
+        seq = 0
+        t = 0.0
+        cooldown = 0
+        queues = self._plan(list(self.tasks), t, {})
+        mean, std = self._estimates()
+
+        def dispatch(t_now: float) -> bool:
+            nonlocal seq
+            progressed = False
+            for node in self.grid.idle(t_now):
+                q = queues[node]
+                pick = next((tid for tid in q
+                             if all(p in done
+                                    for p in self.tasks[tid].pred)), None)
+                if pick is None:
+                    continue
+                q.remove(pick)
+                started.add(pick)
+                dur = float(self.runtime_fn(pick, node))
+                end = t_now + dur
+                self.grid.occupy(node, end)
+                heapq.heappush(heap, (end, seq, pick, node))
+                seq += 1
+                r, c = self._row[pick], self._type_idx[
+                    self.grid.type_of(node).name]
+                expected_finish[pick] = t_now + float(mean[r, c])
+                trace.records.append(TaskRun(
+                    id=pick, name=self.task_name[pick], node=node,
+                    node_type=self.grid.type_of(node).name,
+                    start=t_now, end=end, runtime=dur,
+                    pred_mean=float(mean[r, c]), pred_std=float(std[r, c])))
+                progressed = True
+            return progressed
+
+        while len(done) < len(self.tasks):
+            while dispatch(t):
+                pass
+            if not heap:
+                missing = [tid for tid in self.tasks if tid not in done]
+                raise RuntimeError(
+                    f"execution stalled with {len(missing)} tasks blocked "
+                    "(cyclic dependencies or unassigned tasks?)")
+            end, _, tid, node = heapq.heappop(heap)
+            t = end
+            done[tid] = end
+            run = next(r for r in reversed(trace.records) if r.id == tid)
+            name = self.task_name[tid]
+            ntype = self.grid.type_of(node).name
+            cooldown = max(0, cooldown - 1)
+            if self.online:
+                # surprise gate BEFORE the update: was the realised runtime
+                # outside what the dispatch-time posterior considered likely?
+                lo, hi = self.est.predict_interval_node(
+                    name, ntype, self.size, self.confidence)
+                surprised = not (lo <= run.runtime <= hi)
+                local_rt = self.est.observe(name, ntype, self.size,
+                                            run.runtime)
+                trace.observations.record(name, ntype, self.size,
+                                          run.runtime, local_rt, time=t)
+                mean, std = self._estimates()     # dirty-row refresh only
+                unstarted = [x for x in self.tasks
+                             if x not in started and x not in done]
+                if surprised:
+                    trace.surprises += 1
+                if surprised and unstarted and cooldown == 0:
+                    ext = {**done, **{k: max(v, t)
+                                      for k, v in expected_finish.items()
+                                      if k not in done}}
+                    queues = self._plan(unstarted, t, ext)
+                    trace.replans += 1
+                    cooldown = self.replan_cooldown
+        trace.makespan = max(done.values()) if done else 0.0
+        return trace
+
+
+def fanout_chain_dag(chain: list[str], n_samples: int
+                     ) -> tuple[dict[str, SchedTask], dict[str, str]]:
+    """Physical workflow: ``n_samples`` inputs each flowing through the
+    abstract task ``chain`` (parallel across samples, sequential within).
+    Returns (instance DAG, instance id → abstract task name) — the two
+    structures ``OnlineExecutor`` consumes.  Instance ids are
+    ``s<sample>.<task>``."""
+    tasks: dict[str, SchedTask] = {}
+    task_name: dict[str, str] = {}
+    for s in range(n_samples):
+        prev = None
+        for nm in chain:
+            tid = f"s{s}.{nm}"
+            tasks[tid] = SchedTask(id=tid)
+            task_name[tid] = nm
+            if prev is not None:
+                tasks[tid].pred.append(prev)
+                tasks[prev].succ.append(tid)
+            prev = tid
+    return tasks, task_name
+
+
+def run_static_and_online(make_executor) -> tuple[ExecutionTrace,
+                                                  ExecutionTrace]:
+    """Convenience: run the same scenario twice — frozen initial plan vs
+    the full observe/re-plan loop.  ``make_executor(online)`` must build a
+    fresh executor (estimator state is mutated by the online run)."""
+    static = make_executor(online=False).run()
+    online = make_executor(online=True).run()
+    return static, online

@@ -79,15 +79,20 @@ def upward_rank_array(succ: list[list[int]], pred: list[list[int]],
 def heft_schedule_array(succ: list[list[int]], pred: list[list[int]],
                         cost: np.ndarray,
                         uncertainty: np.ndarray | None = None,
-                        risk_k: float = 0.0) -> dict:
+                        risk_k: float = 0.0,
+                        node_ready: np.ndarray | None = None,
+                        task_ready: np.ndarray | None = None) -> dict:
     """HEFT over a (T, N) cost matrix — the ndarray fast path.
 
     ``succ`` / ``pred`` are index-based adjacency lists; ``cost[t, n]`` the
     estimated runtime of task t on node n (``uncertainty`` likewise, used
     when risk_k > 0: effective cost = mean + risk_k * sigma).  The EFT
-    inner loop is vectorised over the node axis.  Returns index-based
-    arrays: {assignment (T,) int, start (T,), finish (T,), makespan,
-    order (T,) int}."""
+    inner loop is vectorised over the node axis.  ``node_ready`` (N,) /
+    ``task_ready`` (T,) are earliest-availability floors for mid-execution
+    re-planning: node j is busy until node_ready[j], task t's external
+    predecessors (already done or running) finish at task_ready[t].
+    Returns index-based arrays: {assignment (T,) int, start (T,),
+    finish (T,), makespan, order (T,) int}."""
     cost = np.asarray(cost, np.float64)
     T, N = cost.shape
     eff = cost
@@ -95,12 +100,15 @@ def heft_schedule_array(succ: list[list[int]], pred: list[list[int]],
         eff = cost + risk_k * np.asarray(uncertainty, np.float64)
     rank = upward_rank_array(succ, pred, cost.mean(axis=1))
     order = np.argsort(-rank, kind="stable")
-    node_free = np.zeros(N)
+    node_free = (np.zeros(N) if node_ready is None
+                 else np.asarray(node_ready, np.float64).copy())
+    floors = (np.zeros(T) if task_ready is None
+              else np.asarray(task_ready, np.float64))
     start = np.zeros(T)
     finish = np.zeros(T)
     assignment = np.zeros(T, np.int64)
     for t in order:
-        ready = 0.0
+        ready = floors[t]
         for p in pred[t]:
             if finish[p] > ready:
                 ready = finish[p]

@@ -21,7 +21,7 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core.nodes import NodeType, get_node
+from repro.core.nodes import NodeType, get_node, target_nodes
 from .workflows import REF_CPU, REF_IO, TaskDef, effective_size
 
 
@@ -112,6 +112,47 @@ class SimNode:
     busy_until: float = 0.0
     alive: bool = True
     slowdown: float = 1.0      # straggler multiplier (hidden)
+
+
+class GridEngine:
+    """Named-node availability registry — the minimal cluster-state API the
+    online executor drives (grid-engine style: concrete node instances of
+    heterogeneous types, each busy until some time).
+
+    Deliberately dumb: it knows who is free when, nothing about tasks.
+    The executor owns queues and decisions; ``EventSimulator`` remains the
+    batch-mode engine for pre-computed schedules."""
+
+    def __init__(self, nodes: list[SimNode]):
+        self.nodes = {n.name: n for n in nodes}
+
+    @classmethod
+    def from_types(cls, nodes_per_type: int = 2,
+                   types: list[NodeType] | None = None) -> "GridEngine":
+        """Expand node types into `nodes_per_type` instances each
+        (named ``<type>/<i>``, like the scheduler benchmarks)."""
+        types = list(types) if types is not None else target_nodes()
+        return cls([SimNode(name=f"{nt.name}/{i}", node_type=nt)
+                    for nt in types for i in range(nodes_per_type)])
+
+    def names(self) -> list[str]:
+        return list(self.nodes)
+
+    def type_of(self, name: str) -> NodeType:
+        return self.nodes[name].node_type
+
+    def occupy(self, name: str, until: float) -> None:
+        self.nodes[name].busy_until = until
+
+    def idle(self, t: float) -> list[str]:
+        return [n for n, sn in self.nodes.items()
+                if sn.alive and sn.busy_until <= t + 1e-12]
+
+    def ready_vector(self, t: float) -> np.ndarray:
+        """(N,) earliest availability per node (``names()`` order) — the
+        ``node_ready`` floor for a mid-execution HEFT re-plan."""
+        return np.array([max(sn.busy_until, t)
+                         for sn in self.nodes.values()])
 
 
 class EventSimulator:

@@ -1,0 +1,65 @@
+"""Property test (satellite of the online subsystem): an arbitrary shuffled
+observation stream absorbed via ``update_task_batch`` must match
+``fit_task_batch`` on the concatenated data — means, stds, and the Pearson
+gate — because the NIG posterior is a function of sufficient statistics."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; skip, don't die
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+from repro.core import blr
+
+# float32 default leaves ~1e-5 headroom on accumulated moments; under x64
+# (the benchmark's config) the observed gap is ~1e-15
+RTOL = 1e-6 if jax.config.jax_enable_x64 else 5e-4
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6), st.integers(1, 10))
+def test_shuffled_stream_matches_concat_refit(seed, n_tasks, per_task):
+    rng = np.random.default_rng(seed)
+    base = []
+    for i in range(n_tasks):
+        m = int(rng.integers(3, 9))
+        xs = np.sort(rng.uniform(1.0, 100.0, m))
+        if i % 2 == 0:   # clearly correlated (gate on, away from 0.8)
+            ys = rng.uniform(0.5, 5.0) * xs + rng.uniform(0.0, 20.0)
+        else:            # clearly flat (gate off)
+            ys = np.full(m, rng.uniform(10.0, 100.0))
+            ys = ys + rng.normal(0.0, 1e-3, m)
+        base.append((xs, np.abs(ys)))
+    model = blr.fit_task_batch([b[0] for b in base], [b[1] for b in base])
+
+    stream = []
+    for i in range(n_tasks):
+        for _ in range(per_task):
+            x = float(rng.uniform(1.0, 200.0))
+            y = float(rng.uniform(1.0, 500.0))
+            stream.append((i, x, y))
+    rng.shuffle(stream)
+    for i, x, y in stream:
+        model = blr.update_task_batch(model, i, x, y)
+
+    concat = [(np.concatenate([base[i][0],
+                               [s[1] for s in stream if s[0] == i]]),
+               np.concatenate([base[i][1],
+                               [s[2] for s in stream if s[0] == i]]))
+              for i in range(n_tasks)]
+    refit = blr.fit_task_batch([c[0] for c in concat],
+                               [c[1] for c in concat])
+
+    assert np.array_equal(np.asarray(model.correlated),
+                          np.asarray(refit.correlated))
+    for xq in (2.0, 75.0, 180.0):
+        mi, si = blr.predict_task_batch(model, xq)
+        mr, sr = blr.predict_task_batch(refit, xq)
+        np.testing.assert_allclose(np.asarray(mi), np.asarray(mr),
+                                   rtol=RTOL, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(si), np.asarray(sr),
+                                   rtol=RTOL, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(model.median),
+                               np.asarray(refit.median),
+                               rtol=RTOL, atol=1e-5)

@@ -1,0 +1,109 @@
+"""LotaruEstimator persistence: schema versioning, bit-exact round trips,
+and legacy (v1) file compatibility."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import SCHEMA_VERSION, LotaruEstimator
+from repro.core.profiler import BenchResult
+
+
+def _bench(name, cpu, io):
+    return BenchResult(node=name, cpu_events_s=cpu, matmul_gflops=100.0,
+                       mem_gbps=20.0, io_read_mbps=io, io_write_mbps=io,
+                       link_gbps=0.0)
+
+
+def _fitted(seed=0):
+    rng = np.random.default_rng(seed)
+    local = _bench("local-cpu", 450.0, 420.0)
+    benches = {f"n{j}": _bench(f"n{j}", float(rng.uniform(150, 900)),
+                               float(rng.uniform(100, 900)))
+               for j in range(3)}
+    est = LotaruEstimator(local, benches, freq_reduction=0.25)
+    laws = {"lin0": lambda s: 3.0 * s + 4.0,
+            "lin1": lambda s: 11.0 * s + 1.0,
+            "flat": lambda s: 42.0}          # exercises the median fallback
+    est.fit_tasks(list(laws), 64.0,
+                  lambda n, s, cf: laws[n](s) / cf, n_partitions=8)
+    return est
+
+
+def test_save_writes_schema_version(tmp_path):
+    est = _fitted()
+    p = tmp_path / "est.json"
+    est.save(p)
+    d = json.loads(p.read_text())
+    assert d["version"] == SCHEMA_VERSION
+    assert d["freq_reduction"] == 0.25
+    for rec in d["tasks"].values():
+        assert "model" in rec and "correlated" in rec["model"]
+
+
+def test_roundtrip_preserves_predictions_bitexact(tmp_path):
+    est = _fitted(seed=1)
+    p = tmp_path / "est.json"
+    est.save(p)
+    loaded = LotaruEstimator.load(p)
+    assert loaded.freq_reduction == est.freq_reduction
+    nodes = list(est.target_benches)
+    M0, S0 = est.predict_matrix(nodes, 40.0)
+    M1, S1 = loaded.predict_matrix(nodes, 40.0)
+    assert np.array_equal(M0, M1)
+    assert np.array_equal(S0, S1)
+    # scalar predictions too (incl. the median-fallback task)
+    for tn in est.task_names():
+        for nd in nodes:
+            assert est.predict(tn, nd, 40.0) == loaded.predict(tn, nd, 40.0)
+        assert est.predict_local(tn, 40.0) == loaded.predict_local(tn, 40.0)
+
+
+def test_roundtrip_preserves_gating_and_weights(tmp_path):
+    est = _fitted(seed=2)
+    p = tmp_path / "est.json"
+    est.save(p)
+    loaded = LotaruEstimator.load(p)
+    for tn in est.task_names():
+        assert loaded.tasks[tn].model.correlated == \
+            est.tasks[tn].model.correlated
+        assert loaded.tasks[tn].w == est.tasks[tn].w
+    assert not loaded.tasks["flat"].model.correlated
+    assert loaded.tasks["lin0"].model.correlated
+
+
+def test_roundtrip_after_online_observations(tmp_path):
+    """Online-updated state survives persistence: the saved raw history
+    includes the de-adjusted observations, so the loaded estimator's
+    refit reproduces the incrementally-updated predictions."""
+    est = _fitted(seed=3)
+    node = list(est.target_benches)[0]
+    for k in range(4):
+        est.observe("lin0", node, 50.0 + k, 200.0 + 5 * k)
+    p = tmp_path / "est.json"
+    est.save(p)
+    loaded = LotaruEstimator.load(p)
+    nodes = list(est.target_benches)
+    M0, _ = est.predict_matrix(nodes, 40.0)
+    M1, _ = loaded.predict_matrix(nodes, 40.0)
+    np.testing.assert_allclose(M0, M1, rtol=5e-4, atol=1e-5)
+
+
+def test_legacy_v1_file_still_loads(tmp_path):
+    est = _fitted(seed=4)
+    p = tmp_path / "v1.json"
+    # the seed's on-disk format: raw samples only, no version field
+    out = {"local_bench": est.local_bench.to_dict(),
+           "target_benches": {k: v.to_dict()
+                              for k, v in est.target_benches.items()},
+           "tasks": {name: {"w": ft.w,
+                            "sizes": list(map(float, ft.sizes)),
+                            "runtimes": list(map(float, ft.runtimes))}
+                     for name, ft in est.tasks.items()}}
+    p.write_text(json.dumps(out))
+    loaded = LotaruEstimator.load(p)
+    assert set(loaded.task_names()) == set(est.task_names())
+    for tn in est.task_names():
+        m0, _ = est.predict_local(tn, 40.0)
+        m1, _ = loaded.predict_local(tn, 40.0)
+        assert m1 == pytest.approx(m0, rel=1e-3)
