@@ -1,0 +1,34 @@
+"""CI perf gate over BENCH_online.json (written by bench_online --gate).
+
+Fails the build when either online-estimation win regresses:
+
+* online-vs-static final MPE must win on ALL workflows (PR 2 invariant);
+* bias-corrected online must beat the bias-free (PR 2) online final MPE
+  on >= 3 of the 5 workflows (PR 3 invariant).
+"""
+import json
+import sys
+from pathlib import Path
+
+BENCH = Path(__file__).resolve().parents[1] / "BENCH_online.json"
+
+
+def main() -> int:
+    e = json.loads(BENCH.read_text())["execution"]
+    n = e["n_workflows"]
+    ok = True
+    if e["online_mpe_wins"] != n:
+        print(f"FAIL online-vs-static MPE wins {e['online_mpe_wins']}/{n} "
+              "(expected all)")
+        ok = False
+    if e["bias_mpe_wins"] < 3:
+        print(f"FAIL bias-vs-PR2 MPE wins {e['bias_mpe_wins']}/{n} "
+              "(expected >= 3)")
+        ok = False
+    print(f"online {e['online_mpe_wins']}/{n}, bias {e['bias_mpe_wins']}/{n}"
+          + ("" if ok else " -- GATE FAILED"))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

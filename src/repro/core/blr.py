@@ -611,6 +611,179 @@ def update_task_batch(model: BatchedTaskModel, task_idx: int, x, y, *,
                                     threshold), log)
 
 
+# ---------------------------------------------------------------------------
+# Per-(task, node) multiplicative bias — conjugate posterior on log-residuals
+# ---------------------------------------------------------------------------
+class BiasModel:
+    """Systematic per-(task, node) residual learned online.
+
+    The factor adjustment transfers the *average* hardware ratio, but real
+    tasks hit different codepaths per machine, leaving a stable per-pair
+    residual the factor cannot capture (the paper's Tables 4-6 error
+    floor).  Model the multiplicative bias ``b[t, n]`` of task ``t`` on
+    node ``n`` through its log:
+
+        log r_k ~ N(beta, sigma_r^2),   beta ~ N(0, tau0^2)
+
+    where ``r_k = measured / (factor x local prediction)`` is the k-th
+    observed residual of the pair.  Conjugacy gives the closed-form
+    posterior ``beta | r_1..r_n ~ N(mu, v)`` with
+
+        lam = 1/tau0^2 + n/sigma_r^2,  mu = (sum log r)/(sigma_r^2 lam),
+        v = 1/lam
+
+    so the point estimate ``exp(mu)`` shrinks toward 1.0 under few
+    observations and ``v`` quantifies how unsure the bias still is —
+    consumers widen their predictive std/interval by it.  Pairs with zero
+    observations are INERT (bias 1, no widening): the layer only activates
+    where evidence exists, so a freshly fitted estimator predicts exactly
+    like the pure factor-scaled path.
+
+    State is three (T, N) float64 host arrays (counts, sum log r,
+    sum (log r)^2) — sufficient statistics, so updates are O(batch) numpy
+    scatters and the whole object serialises to JSON losslessly.  The
+    second moment is not consumed by ``posterior()`` (``sigma_r`` is
+    fixed today) but is persisted so the empirical-Bayes noise estimate
+    (see ``residual_spread`` and the ROADMAP open item) can be fitted
+    over histories recorded before it lands, without a schema bump.  Row
+    order follows the estimator's ``task_names()``; column order is the
+    estimator's fixed node universe.
+    """
+
+    __slots__ = ("counts", "log_sum", "log_sq", "tau0", "sigma_r")
+
+    def __init__(self, n_tasks: int, n_nodes: int, *, tau0: float = 0.5,
+                 sigma_r: float = 0.25, counts=None, log_sum=None,
+                 log_sq=None):
+        shape = (n_tasks, n_nodes)
+        self.counts = (np.zeros(shape) if counts is None
+                       else np.asarray(counts, np.float64).reshape(shape))
+        self.log_sum = (np.zeros(shape) if log_sum is None
+                        else np.asarray(log_sum, np.float64).reshape(shape))
+        self.log_sq = (np.zeros(shape) if log_sq is None
+                       else np.asarray(log_sq, np.float64).reshape(shape))
+        self.tau0 = float(tau0)
+        self.sigma_r = float(sigma_r)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.counts.shape
+
+    def update(self, rows, cols, log_resid) -> None:
+        """Absorb a batch of log-residuals at (rows[k], cols[k]) — repeated
+        pairs accumulate (``np.add.at`` scatter)."""
+        rows = np.asarray(rows, np.int64)
+        cols = np.asarray(cols, np.int64)
+        lr = np.asarray(log_resid, np.float64)
+        np.add.at(self.counts, (rows, cols), 1.0)
+        np.add.at(self.log_sum, (rows, cols), lr)
+        np.add.at(self.log_sq, (rows, cols), lr * lr)
+
+    def posterior(self) -> tuple[np.ndarray, np.ndarray]:
+        """(mu, v): posterior mean and variance of the log-bias, (T, N)."""
+        lam = 1.0 / self.tau0 ** 2 + self.counts / self.sigma_r ** 2
+        mu = self.log_sum / (self.sigma_r ** 2 * lam)
+        return mu, 1.0 / lam
+
+    def matrix(self, cols=None) -> np.ndarray:
+        """(T, N') multiplicative bias point estimates, inert (1.0) where
+        unobserved; ``cols`` selects/reorders node columns."""
+        mu, _ = self.posterior()
+        b = np.where(self.counts > 0, np.exp(mu), 1.0)
+        return b if cols is None else b[:, cols]
+
+    def widen_std(self, mean, std, cols=None) -> np.ndarray:
+        """Fold the bias into a predictive std: the bias-scaled std plus
+        the residual uncertainty of the bias itself (delta method on
+        ``exp(beta)``), inert where unobserved.
+
+        ``mean`` / ``std`` are the bias-free (T, N') prediction arrays.
+        """
+        mu, v = self.posterior()
+        if cols is not None:
+            mu, v = mu[:, cols], v[:, cols]
+            n = self.counts[:, cols]
+        else:
+            n = self.counts
+        widened = np.exp(mu) * np.sqrt(
+            np.asarray(std, np.float64) ** 2
+            + np.asarray(mean, np.float64) ** 2 * np.expm1(v))
+        return np.where(n > 0, widened, std)
+
+    def _pair(self, i: int, j: int) -> tuple[float, float, float]:
+        """(n, mu, v) of one (task, node) pair without building matrices."""
+        n = float(self.counts[i, j])
+        lam = 1.0 / self.tau0 ** 2 + n / self.sigma_r ** 2
+        mu = float(self.log_sum[i, j]) / (self.sigma_r ** 2 * lam)
+        return n, mu, 1.0 / lam
+
+    def point(self, i: int, j: int) -> float:
+        """Scalar bias point estimate for one pair (1.0 when unobserved)."""
+        n, mu, _ = self._pair(i, j)
+        return float(np.exp(mu)) if n > 0 else 1.0
+
+    def fold_scalar(self, i: int, j: int, mean: float, std: float
+                    ) -> tuple[float, float]:
+        """Scalar twin of ``matrix``/``widen_std`` (the matrix consumers'
+        equivalence oracle — keep the two in lock-step)."""
+        n, mu, v = self._pair(i, j)
+        if n <= 0:
+            return float(mean), float(std)
+        b = float(np.exp(mu))
+        return (float(mean) * b,
+                b * float(np.sqrt(std ** 2 + mean ** 2 * np.expm1(v))))
+
+    def interval_scale(self, i: int, j: int, z: float
+                       ) -> tuple[float, float]:
+        """Multiplicative (lo, hi) scales for an equal-tailed predictive
+        interval: the bias point estimate spread by ``z`` posterior sds of
+        the log-bias — (1, 1) when the pair is unobserved."""
+        n, mu, v = self._pair(i, j)
+        if n <= 0:
+            return 1.0, 1.0
+        sd = float(np.sqrt(v))
+        return float(np.exp(mu - z * sd)), float(np.exp(mu + z * sd))
+
+    def residual_spread(self) -> float:
+        """Pooled empirical sd of the log-residuals around their per-pair
+        means — the data-driven counterpart of ``sigma_r``.  Diagnostic:
+        a spread far from the configured ``sigma_r`` means the shrinkage
+        weights are mis-calibrated for this cluster.  NaN until some pair
+        has at least two observations."""
+        n = self.counts
+        mask = n >= 2
+        if not mask.any():
+            return float("nan")
+        ss = self.log_sq[mask] - self.log_sum[mask] ** 2 / n[mask]
+        dof = (n[mask] - 1).sum()
+        return float(np.sqrt(max(ss.sum(), 0.0) / max(dof, 1.0)))
+
+    def expand_rows(self, n_tasks: int) -> None:
+        """Grow the task axis (new tasks appended) preserving history."""
+        t0, n0 = self.counts.shape
+        if n_tasks < t0:
+            raise ValueError(f"cannot shrink bias rows {t0} -> {n_tasks}")
+        if n_tasks == t0:
+            return
+        pad = ((0, n_tasks - t0), (0, 0))
+        self.counts = np.pad(self.counts, pad)
+        self.log_sum = np.pad(self.log_sum, pad)
+        self.log_sq = np.pad(self.log_sq, pad)
+
+    def to_dict(self) -> dict:
+        return {"tau0": self.tau0, "sigma_r": self.sigma_r,
+                "counts": self.counts.tolist(),
+                "log_sum": self.log_sum.tolist(),
+                "log_sq": self.log_sq.tolist()}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BiasModel":
+        counts = np.asarray(d["counts"], np.float64)
+        return cls(counts.shape[0], counts.shape[1], tau0=d["tau0"],
+                   sigma_r=d["sigma_r"], counts=counts,
+                   log_sum=d["log_sum"], log_sq=d["log_sq"])
+
+
 def update_task_batch_stream(model: BatchedTaskModel, task_idx, x, y, *,
                              prior_scale: float = 10.0, a0: float = 1.0,
                              b0: float = 1.0,

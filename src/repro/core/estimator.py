@@ -26,13 +26,114 @@ from scipy import stats as _scipy_stats
 
 from .adjust import (cpu_weight, deviation, roofline_weights, runtime_factor,
                      runtime_factor3, stack_benches)
-from .blr import (BatchedTaskModel, TaskModel, fit_task, fit_task_batch,
-                  predict_interval, predict_task_batch, slice_task_model,
-                  stack_task_models, unstack_task_models, update_task_batch)
+from .blr import (BatchedTaskModel, BiasModel, TaskModel, fit_task,
+                  fit_task_batch, predict_interval, predict_task_batch,
+                  slice_task_model, stack_task_models, unstack_task_models,
+                  update_task_batch_stream)
 from .downsample import partition_sizes
 from .profiler import BenchResult
 
-SCHEMA_VERSION = 2   # LotaruEstimator.save/load on-disk format
+SCHEMA_VERSION = 3   # LotaruEstimator.save/load on-disk format
+
+
+def _fold_bias_matrix(bias: BiasModel, bias_col: dict[str, int],
+                      nodes: list[str], mean: np.ndarray, std: np.ndarray):
+    """Fold a learned (row × node) bias into a bias-free estimate matrix:
+    mean scaled by the posterior point estimate, std widened by the
+    posterior uncertainty.  Unobserved pairs and nodes outside the bias
+    universe pass through untouched (bitwise), so dirty-row caches stay
+    valid."""
+    known = [k for k, n in enumerate(nodes) if n in bias_col]
+    if not known:
+        return mean.copy(), std.copy()
+    cols = [bias_col[nodes[k]] for k in known]
+    out_mean, out_std = mean.copy(), std.copy()
+    out_std[:, known] = bias.widen_std(mean[:, known], std[:, known], cols)
+    out_mean[:, known] = mean[:, known] * bias.matrix(cols)
+    return out_mean, out_std
+
+
+def _as_obs_tuple(o) -> tuple[str, str, float, float]:
+    """Accept (task, node, size, runtime) tuples or Observation-likes."""
+    if isinstance(o, (tuple, list)):
+        task, node, size, runtime = o
+        return str(task), str(node), float(size), float(runtime)
+    return str(o.task), str(o.node), float(o.size), float(o.runtime)
+
+
+class _BiasLayer:
+    """Shared per-(row, node) bias plumbing of the two estimators.
+
+    The concrete class exposes its ordered row registry via
+    ``_bias_rows()`` (``tasks`` for the genomics plane, ``cells`` for the
+    ML plane); everything else — node-column universe, lazy state
+    creation, matrix/scalar folding, row lookup — lives here once, so the
+    two planes cannot drift apart."""
+
+    def _bias_setup(self, bias_correction: bool) -> None:
+        self.bias_correction = bias_correction
+        self.bias: BiasModel | None = None
+        self.bias_nodes = ([self.local_bench.node]
+                           + list(self.target_benches))
+        self._bias_col = {n: j for j, n in enumerate(self.bias_nodes)}
+        self._row_map: dict[str, int] | None = None
+
+    def _bias_rows(self) -> dict:
+        raise NotImplementedError
+
+    def _row_of(self, name: str) -> int:
+        """Row index of a task/cell — cached: the executor hits this per
+        completion and per running task, and a linear scan per call would
+        make every tick O(T²)."""
+        rows = self._bias_rows()
+        if self._row_map is None or len(self._row_map) != len(rows):
+            self._row_map = {n: i for i, n in enumerate(rows)}
+        return self._row_map[name]
+
+    def _ensure_bias(self) -> BiasModel:
+        """Bias state sized to the current row set (rows grow with it).
+        The node universe snapshots ``target_benches`` the moment the
+        first state is created — until then a swapped-out bench dict is
+        picked up; after, columns are pinned so accumulated pair stats
+        never silently misalign."""
+        if self.bias is None:
+            self.bias_nodes = ([self.local_bench.node]
+                               + list(self.target_benches))
+            self._bias_col = {n: j for j, n in enumerate(self.bias_nodes)}
+            self.bias = BiasModel(len(self._bias_rows()),
+                                  len(self.bias_nodes))
+        else:
+            self.bias.expand_rows(len(self._bias_rows()))
+        return self.bias
+
+    def _bias_fold(self, nodes: list[str], mean: np.ndarray,
+                   std: np.ndarray):
+        if not self.bias_correction:
+            return mean.copy(), std.copy()
+        return _fold_bias_matrix(self._ensure_bias(), self._bias_col,
+                                 nodes, mean, std)
+
+    def _bias_fold_scalar(self, name: str, node: str, mean: float,
+                          std: float) -> tuple[float, float]:
+        if self.bias_correction:
+            bias = self._ensure_bias()
+            j = self._bias_col.get(node)
+            if j is not None:
+                return bias.fold_scalar(self._row_of(name), j, mean, std)
+        return mean, std
+
+    def bias_point(self, name: str, node: str) -> float:
+        """Current multiplicative bias point estimate for the
+        (task/cell, node) pair — 1.0 when the pair is unobserved or bias
+        correction is off.  The straggler coupling reads this: a pair
+        whose bias has drifted high is systematically slower than its
+        prediction admits."""
+        if not self.bias_correction or self.bias is None:
+            return 1.0
+        j = self._bias_col.get(node)
+        if j is None:
+            return 1.0
+        return self.bias.point(self._row_of(name), j)
 
 
 @jax.jit
@@ -97,12 +198,12 @@ class FittedTask:
     runtimes: np.ndarray
 
 
-class LotaruEstimator:
+class LotaruEstimator(_BiasLayer):
     """Paper-faithful estimator over black-box tasks."""
 
     def __init__(self, local_bench: BenchResult,
                  target_benches: dict[str, BenchResult],
-                 freq_reduction: float = 0.2):
+                 freq_reduction: float = 0.2, bias_correction: bool = True):
         self.local_bench = local_bench
         self.target_benches = target_benches
         self.freq_reduction = freq_reduction
@@ -110,6 +211,13 @@ class LotaruEstimator:
         self._batch_cache: tuple | None = None
         self._mat_cache: dict | None = None    # last (T, N) estimate matrix
         self._dirty_rows: set[int] = set()     # rows invalidated by observe()
+        # online heterogeneity correction: per-(task, node) multiplicative
+        # bias posterior fed by observe(); bias_correction=False keeps the
+        # pure factor-scaled path (the paper-faithful / PR-2 ablation)
+        self._bias_setup(bias_correction)
+
+    def _bias_rows(self) -> dict:
+        return self.tasks
 
     # ---- phases 2+3: local downsampled runs + model fit -------------------
     def fit_tasks(self, task_names: list[str], input_size: float,
@@ -142,6 +250,7 @@ class LotaruEstimator:
         self._batch_cache = None
         self._mat_cache = None
         self._dirty_rows.clear()
+        self._row_map = None
         names = list(self.tasks)
         if names == list(task_names):    # batch covers the whole task set
             fts = [self.tasks[n] for n in names]
@@ -157,11 +266,16 @@ class LotaruEstimator:
                               self.target_benches[node])
 
     def predict(self, task_name: str, node: str, size: float):
-        """(mean, std) for task on node at input size."""
+        """(mean, std) for task on node at input size.
+
+        The factor-scaled Student-t prediction, with the learned
+        per-(task, node) bias folded in when the pair has been observed
+        (scalar oracle of ``predict_matrix`` — test-enforced)."""
         ft = self.tasks[task_name]
         mean, std = ft.model.predict(size)
         f = self.factor(task_name, node)
-        return float(mean) * f, float(std) * f
+        mean, std = float(mean) * f, float(std) * f
+        return self._bias_fold_scalar(task_name, node, mean, std)
 
     def predict_local(self, task_name: str, size: float):
         ft = self.tasks[task_name]
@@ -217,7 +331,10 @@ class LotaruEstimator:
 
         The matrix is cached per (nodes, size); ``observe`` invalidates
         only the observed task's row, so an online re-predict recomputes
-        the dirty rows instead of the whole matrix."""
+        the dirty rows instead of the whole matrix.  The cache holds the
+        bias-free factor-scaled matrix; the (cheap, host-side) bias fold
+        is applied on the way out so bias updates never force a jitted
+        recompute of clean rows."""
         _, model, _ = self._batched()
         dt = model.post.mu.dtype
         key = (tuple(nodes), np.asarray(size, np.float64).tobytes())
@@ -233,7 +350,7 @@ class LotaruEstimator:
                 c["mean"][idx] = np.asarray(mean_r, np.float64)
                 c["std"][idx] = np.asarray(std_r, np.float64)
                 self._dirty_rows.clear()
-            return c["mean"].copy(), c["std"].copy()
+            return self._bias_fold(nodes, c["mean"], c["std"])
         F = self.factor_matrix(nodes)
         mean, std = _scaled_matrix_core(model, jnp.asarray(F, dt),
                                         jnp.asarray(size, dt))
@@ -243,66 +360,142 @@ class LotaruEstimator:
                            "mean": np.array(mean, np.float64),
                            "std": np.array(std, np.float64)}
         self._dirty_rows.clear()
-        return self._mat_cache["mean"].copy(), self._mat_cache["std"].copy()
+        return self._bias_fold(nodes, self._mat_cache["mean"],
+                               self._mat_cache["std"])
 
     # ---- phase 5 (beyond paper): online estimation ------------------------
     def observe(self, task_name: str, node: str, size: float,
                 runtime: float) -> float:
         """Feed one realised (size, runtime) from ``node`` back in.
 
-        The measured runtime is de-adjusted by the node's factor to the
-        local-machine scale, absorbed by the incremental conjugate update
-        (O(d²), no refit), and only the task's row of any cached estimate
-        matrix is invalidated.  Returns the de-adjusted local-equivalent
-        runtime that entered the model."""
+        Single-observation convenience over ``observe_batch`` — returns
+        the de-adjusted local-equivalent runtime that entered the model."""
+        return self.observe_batch([(task_name, node, size, runtime)])[0]
+
+    def observe_batch(self, observations) -> list[float]:
+        """Absorb a whole tick's completions in one scanned stream.
+
+        ``observations``: iterable of ``(task, node, size, runtime)``
+        tuples or ``Observation``-likes (``.task/.node/.size/.runtime``) —
+        e.g. everything that finished at the same simulation time.  Per
+        observation:
+
+        * the measured runtime is de-adjusted by factor × tick-start bias
+          to the local-machine scale and queued for the model update;
+        * after ONE ``update_task_batch_stream`` scan absorbs the queued
+          stream (identical math to sequential ``update_task_batch``
+          calls, no per-observation Python dispatch), each observation's
+          residual against the POST-update factor-scaled prediction feeds
+          the conjugate per-(task, node) bias posterior — what the
+          refreshed model still cannot explain is the pair-specific part.
+
+        Only the affected rows of any cached estimate matrix are
+        invalidated.  Tick semantics: all residuals in the batch are
+        evaluated against the post-tick posterior, so two same-task
+        observations in one tick see the same model mean — sequential
+        ``observe`` calls refresh it in between (batches over distinct
+        tasks are exactly equivalent to sequential calls).  Returns the
+        de-adjusted local runtimes in input order."""
+        obs = [_as_obs_tuple(o) for o in observations]
+        if not obs:
+            return []
         names, model, _ = self._batched()
-        i = names.index(task_name)
-        f = self.factor(task_name, node)
-        local_rt = float(runtime) / max(float(f), 1e-12)
-        new_model = update_task_batch(model, i, float(size), local_rt)
-        ft = self.tasks[task_name]
-        # keep the raw history on the FittedTask (same object, so the
-        # batched cache's identity check stays valid) — a later full refit
-        # over these arrays reproduces the incremental state
-        ft.sizes = np.append(ft.sizes, float(size))
-        ft.runtimes = np.append(ft.runtimes, local_rt)
-        ft.model = slice_task_model(new_model, i)
+        row = {n: k for k, n in enumerate(names)}
+        bias = self._ensure_bias() if self.bias_correction else None
+        idx = np.empty(len(obs), np.int64)
+        xs = np.empty(len(obs), np.float64)
+        ys = np.empty(len(obs), np.float64)
+        factors = np.empty(len(obs), np.float64)
+        for k, (task, node, size, runtime) in enumerate(obs):
+            i = row[task]
+            f = max(float(self.factor(task, node)), 1e-12)
+            b = 1.0
+            if bias is not None and node in self._bias_col:
+                b = bias.point(i, self._bias_col[node])
+            idx[k] = i
+            xs[k] = size
+            ys[k] = runtime / (f * max(b, 1e-12))
+            factors[k] = f
+        new_model = update_task_batch_stream(model, idx, xs, ys)
+        affected = []
+        for k, (task, _, _, _) in enumerate(obs):
+            ft = self.tasks[task]
+            # keep the raw history on the FittedTask (same object, so the
+            # batched cache's identity check stays valid) — a later full
+            # refit over these arrays reproduces the incremental state
+            ft.sizes = np.append(ft.sizes, xs[k])
+            ft.runtimes = np.append(ft.runtimes, ys[k])
+            affected.append(int(idx[k]))
+        for i in set(affected):
+            self.tasks[names[i]].model = slice_task_model(new_model, i)
+        if bias is not None:
+            # bias residuals against the POST-update factor-scaled means:
+            # the model has already absorbed everything it can explain
+            # from this tick (the task-common part), so what is left is
+            # the pair-specific residual — charging the PRE-update means
+            # instead would double-count the model's own transient misfit
+            # into whichever pair happened to report first
+            for k, (task, node, size, runtime) in enumerate(obs):
+                if node not in self._bias_col:
+                    continue
+                m_post, _ = self.tasks[task].model.predict(size)
+                scaled = factors[k] * float(m_post)
+                if runtime > 0.0 and scaled > 1e-12:
+                    bias.update([int(idx[k])], [self._bias_col[node]],
+                                [np.log(runtime / scaled)])
         c = self._batch_cache
         self._batch_cache = (c[0], c[1], new_model, c[3])
         if self._mat_cache is not None and self._mat_cache["model"] is model:
             self._mat_cache["model"] = new_model
-            self._dirty_rows.add(i)
+            self._dirty_rows.update(affected)
         else:
             self._mat_cache = None
-        return local_rt
+        return [float(y) for y in ys]
 
     def predict_interval_node(self, task_name: str, node: str, size: float,
                               confidence: float = 0.9) -> tuple[float, float]:
         """Equal-tailed predictive interval for the task on ``node``.
 
         Student-t interval (factor-scaled) for correlated tasks; a normal
-        median ± z·spread envelope for the median fallback."""
+        median ± z·spread envelope for the median fallback.  When the
+        (task, node) bias pair has been observed, the interval is shifted
+        by the bias point estimate and WIDENED by the bias posterior's
+        own uncertainty (± z posterior sds of the log-bias), so a pair
+        whose bias is still unsettled admits a broader range before the
+        surprise gate fires."""
         ft = self.tasks[task_name]
         f = self.factor(task_name, node)
+        z = float(_scipy_stats.norm.ppf(0.5 + confidence / 2.0))
         if ft.model.correlated:
             lo, hi = predict_interval(ft.model.post, size, confidence)
             lo, hi = float(lo), float(hi)
         else:
-            z = float(_scipy_stats.norm.ppf(0.5 + confidence / 2.0))
             lo = ft.model.median - z * ft.model.spread
             hi = ft.model.median + z * ft.model.spread
-        return max(lo * f, 0.0), hi * f
+        s_lo = s_hi = 1.0
+        if self.bias_correction:
+            bias = self._ensure_bias()
+            j = self._bias_col.get(node)
+            if j is not None:
+                s_lo, s_hi = bias.interval_scale(self._row_of(task_name),
+                                                 j, z)
+        return max(lo * f * s_lo, 0.0), hi * f * s_hi
 
     # ---- offline reuse (paper §1: "allows for offline scenarios where the
     # learned models are reused for future executions") -----------------
     def save(self, path) -> None:
-        """Schema v2: persists the fitted posteriors themselves, so a
-        save → load round trip reproduces predictions bit-exactly instead
-        of silently re-fitting with default hyperparameters."""
+        """Schema v3: persists the fitted posteriors themselves (v2), plus
+        the online per-(task, node) bias state, so a save → load round
+        trip reproduces predictions bit-exactly — including everything
+        learned from streamed observations."""
         import json
         from pathlib import Path
         out = {"version": SCHEMA_VERSION,
                "freq_reduction": self.freq_reduction,
+               "bias_correction": self.bias_correction,
+               "bias": None if self.bias is None else {
+                   "nodes": list(self.bias_nodes),
+                   "state": self.bias.to_dict()},
                "local_bench": self.local_bench.to_dict(),
                "target_benches": {k: v.to_dict()
                                   for k, v in self.target_benches.items()},
@@ -337,7 +530,12 @@ class LotaruEstimator:
         local = BenchResult(**d["local_bench"])
         targets = {k: BenchResult(**v) for k, v in d["target_benches"].items()}
         est = cls(local, targets,
-                  freq_reduction=d.get("freq_reduction", 0.2))
+                  freq_reduction=d.get("freq_reduction", 0.2),
+                  bias_correction=d.get("bias_correction", True))
+        if version >= 3 and d.get("bias") is not None:
+            est.bias_nodes = list(d["bias"]["nodes"])
+            est._bias_col = {n: j for j, n in enumerate(est.bias_nodes)}
+            est.bias = BiasModel.from_dict(d["bias"]["state"])
         dt = _default_dtype()
         for name, rec in d["tasks"].items():
             sizes = np.asarray(rec["sizes"])
@@ -379,7 +577,7 @@ class FittedCell:
     runtimes: np.ndarray | None = None
 
 
-class LotaruML:
+class LotaruML(_BiasLayer):
     """Lotaru over (arch x shape) workload cells (beyond-paper integration).
 
     The CPU-frequency probe does not transfer to TPUs; instead the cell's
@@ -394,13 +592,21 @@ class LotaruML:
     _MIX = 0.35   # secondary-term overlap coefficient of the roofline model
 
     def __init__(self, local_bench: BenchResult,
-                 target_benches: dict[str, BenchResult]):
+                 target_benches: dict[str, BenchResult],
+                 bias_correction: bool = True):
         self.local_bench = local_bench
         self.target_benches = target_benches
         self.cells: dict[str, FittedCell] = {}
         self._batch_cache: tuple | None = None
         self._mat_cache: dict | None = None
         self._dirty_rows: set[int] = set()
+        # same online heterogeneity correction as LotaruEstimator: the
+        # decomposed transfer linearises real cells imperfectly, and the
+        # per-(cell, node) residual of that transfer is itself systematic
+        self._bias_setup(bias_correction)
+
+    def _bias_rows(self) -> dict:
+        return self.cells
 
     def fit_cell(self, cell: dict,
                  run_local: Callable[[dict, float], float],
@@ -437,6 +643,7 @@ class LotaruML:
             coll=r["coll_bytes_per_device"], w_compute=w_compute,
             tokens=tokens, runtimes=runtimes)
         self._batch_cache = None
+        self._row_map = None
 
     # ---- helpers -----------------------------------------------------------
     def _terms(self, fc: FittedCell, bench: BenchResult) -> tuple:
@@ -450,7 +657,15 @@ class LotaruML:
 
     # ---- predictors ---------------------------------------------------------
     def predict(self, cell_name: str, node: str, tokens: float | None = None):
-        """Decomposed (per-resource) prediction: the local measurement
+        """Decomposed (per-resource) prediction with the learned
+        per-(cell, node) bias folded in (scalar oracle of
+        ``predict_matrix`` — test-enforced)."""
+        mean, std = self._predict_base(cell_name, node, tokens)
+        return self._bias_fold_scalar(cell_name, node, mean, std)
+
+    def _predict_base(self, cell_name: str, node: str,
+                      tokens: float | None = None):
+        """Bias-free decomposed prediction: the local measurement
         calibrates an efficiency alpha; each term re-scales by its own
         benchmark ratio.
 
@@ -576,7 +791,9 @@ class LotaruML:
         ``tokens``: None (each cell's full step tokens), a scalar, or a
         (T,) per-cell array.  Returns (mean, std) of shape (T, N); rows in
         ``cell_names()`` order, columns in ``nodes`` order.  Cached per
-        (nodes, tokens); ``observe`` dirties only the affected row."""
+        (nodes, tokens) bias-free; the bias fold happens on the way out
+        (see ``LotaruEstimator.predict_matrix``); ``observe`` dirties only
+        the affected row."""
         _, model, arr = self._batched()
         toks = arr["full_tokens"] if tokens is None else np.broadcast_to(
             np.asarray(tokens, np.float64), arr["full_tokens"].shape)
@@ -591,52 +808,93 @@ class LotaruML:
                 c["mean"][idx] = mean_r
                 c["std"][idx] = std_r
                 self._dirty_rows.clear()
-            return c["mean"].copy(), c["std"].copy()
+            return self._bias_fold(nodes, c["mean"], c["std"])
         mean, std = self._matrix_rows(model, arr, toks, nodes)
         self._mat_cache = {"key": key, "model": model,
                            "mean": mean, "std": std}
         self._dirty_rows.clear()
-        return mean.copy(), std.copy()
+        return self._bias_fold(nodes, mean, std)
 
     def observe(self, cell_name: str, node: str, tokens: float,
                 runtime: float) -> float:
-        """Feed one realised (tokens, runtime) from ``node`` back in.
+        """Feed one realised (tokens, runtime) from ``node`` back in
+        (single-observation convenience over ``observe_batch``)."""
+        return self.observe_batch([(cell_name, node, tokens, runtime)])[0]
 
-        The decomposed transfer is nonlinear in the local mean, so the
+    def observe_batch(self, observations) -> list[float]:
+        """Absorb a tick's realised (tokens, runtime) completions at once.
+
+        The decomposed transfer is nonlinear in the local mean, so each
         measured runtime is de-adjusted by the *implied* factor at the
-        current posterior mean (prediction-on-node / local-mean) — exact
-        for the ratio path, a linearisation for the dual-run path — then
-        absorbed by the incremental conjugate update."""
+        tick-start posterior mean (bias-free prediction-on-node /
+        local-mean) — exact for the ratio path, a linearisation for the
+        dual-run path — times the current bias estimate; the residual
+        against the implied prediction feeds the per-(cell, node) bias
+        posterior, and one ``update_task_batch_stream`` scan absorbs the
+        whole de-adjusted stream (see ``LotaruEstimator.observe_batch``
+        for the tick semantics)."""
+        obs = [_as_obs_tuple(o) for o in observations]
+        if not obs:
+            return []
         names, model, arr = self._batched()
-        i = names.index(cell_name)
-        fc = self.cells[cell_name]
-        if fc.tokens is None or fc.runtimes is None:
-            raise ValueError(f"cell {cell_name!r} carries no raw local "
-                             "samples; online updates need fit_cell-built "
-                             "cells")
-        m_node, _ = self.predict(cell_name, node, tokens)
-        m_local, _ = fc.model.predict(tokens)
-        if float(m_local) <= 1e-9:
-            # the clamped-at-zero mean makes the transfer un-invertible;
-            # absorbing runtime/f with f ~ 1e12 would drag the posterior
-            # to zero — reject instead of silently corrupting it
-            raise ValueError(
-                f"cell {cell_name!r}: local predictive mean is ~0 at "
-                f"tokens={tokens}; cannot de-adjust the observation")
-        f = float(m_node) / float(m_local)
-        local_rt = float(runtime) / max(f, 1e-12)
-        new_model = update_task_batch(model, i, float(tokens), local_rt)
-        fc.tokens = np.append(fc.tokens, float(tokens))
-        fc.runtimes = np.append(fc.runtimes, local_rt)
-        fc.model = slice_task_model(new_model, i)
+        row = {n: k for k, n in enumerate(names)}
+        bias = self._ensure_bias() if self.bias_correction else None
+        idx = np.empty(len(obs), np.int64)
+        xs = np.empty(len(obs), np.float64)
+        ys = np.empty(len(obs), np.float64)
+        for k, (cell_name, node, tokens, runtime) in enumerate(obs):
+            i = row[cell_name]
+            fc = self.cells[cell_name]
+            if fc.tokens is None or fc.runtimes is None:
+                raise ValueError(f"cell {cell_name!r} carries no raw local "
+                                 "samples; online updates need "
+                                 "fit_cell-built cells")
+            m_node, _ = self._predict_base(cell_name, node, tokens)
+            m_local, _ = fc.model.predict(tokens)
+            if float(m_local) <= 1e-9:
+                # the clamped-at-zero mean makes the transfer
+                # un-invertible; absorbing runtime/f with f ~ 1e12 would
+                # drag the posterior to zero — reject instead of silently
+                # corrupting it
+                raise ValueError(
+                    f"cell {cell_name!r}: local predictive mean is ~0 at "
+                    f"tokens={tokens}; cannot de-adjust the observation")
+            f = max(float(m_node) / float(m_local), 1e-12)
+            b = 1.0
+            if bias is not None and node in self._bias_col:
+                b = bias.point(i, self._bias_col[node])
+            idx[k] = i
+            xs[k] = tokens
+            ys[k] = runtime / (f * max(b, 1e-12))
+        new_model = update_task_batch_stream(model, idx, xs, ys)
+        affected = []
+        for k, (cell_name, _, _, _) in enumerate(obs):
+            fc = self.cells[cell_name]
+            fc.tokens = np.append(fc.tokens, xs[k])
+            fc.runtimes = np.append(fc.runtimes, ys[k])
+            affected.append(int(idx[k]))
+        for i in set(affected):
+            self.cells[names[i]].model = slice_task_model(new_model, i)
+        if bias is not None:
+            # bias residuals against the POST-update implied predictions —
+            # same invariant as LotaruEstimator.observe_batch: the pair
+            # term only absorbs what the refreshed cell model still
+            # cannot explain
+            for k, (cell_name, node, tokens, runtime) in enumerate(obs):
+                if node not in self._bias_col:
+                    continue
+                m_post, _ = self._predict_base(cell_name, node, tokens)
+                if runtime > 0.0 and float(m_post) > 1e-12:
+                    bias.update([int(idx[k])], [self._bias_col[node]],
+                                [np.log(runtime / float(m_post))])
         c = self._batch_cache
         self._batch_cache = (c[0], c[1], new_model, c[3])
         if self._mat_cache is not None and self._mat_cache["model"] is model:
             self._mat_cache["model"] = new_model
-            self._dirty_rows.add(i)
+            self._dirty_rows.update(affected)
         else:
             self._mat_cache = None
-        return local_rt
+        return [float(y) for y in ys]
 
     def predict_matrix_scalar(self, nodes: list[str], tokens=None):
         """Paper-form single-factor (cell × node) matrix (ablation): the

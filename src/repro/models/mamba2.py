@@ -181,9 +181,12 @@ def decode_mamba2(params: dict, u: jnp.ndarray, cfg: ModelConfig, cache: dict):
     z, xc, B_, C_, dtr = _split_proj(proj, cfg)
     xBC = jnp.concatenate([xc, B_, C_], axis=-1)[:, 0]         # (B, conv_ch)
     window = jnp.concatenate([cache["conv"].astype(dt_), xBC[:, None, :]], axis=1)
-    conv_out = (jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
-                           params["conv_w"].astype(jnp.float32))
-                + params["conv_b"].astype(jnp.float32))
+    # Run the SAME depthwise-conv op as the prefill path (same dtype, same
+    # XLA kernel) and take the last position: an fp32 einsum here is more
+    # precise but *different* — the unquantised conv output drifts from the
+    # prefill's bf16 one by an ulp per layer, and the hybrid (zamba2)
+    # attention blocks amplify that past decode-consistency tolerance.
+    conv_out = _causal_conv(window, params["conv_w"], params["conv_b"])[:, -1]
     conv_out = jax.nn.silu(conv_out)
     gn = s.n_groups * s.d_state
     xc1 = conv_out[:, :di]

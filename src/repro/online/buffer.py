@@ -61,8 +61,33 @@ class ObservationBuffer:
     def arrays(self, task_index: dict[str, int]):
         """(task_idx, sizes, local_runtimes) arrays in stream order — the
         exact input ``update_task_batch_stream`` needs to replay the
-        stream onto a freshly fitted ``BatchedTaskModel``."""
+        stream onto a freshly fitted ``BatchedTaskModel``.
+
+        Raises ``ValueError`` naming the offending task when an
+        observation's task is missing from ``task_index`` (a replay onto
+        a model fitted for a different task set would otherwise die with
+        a bare ``KeyError`` deep in the comprehension)."""
+        missing = sorted({o.task for o in self._obs
+                          if o.task not in task_index})
+        if missing:
+            raise ValueError(
+                f"observation task(s) {missing} not in task_index "
+                f"(known: {sorted(task_index)}) — the buffer was recorded "
+                "against a different task set than the model being replayed")
         idx = np.array([task_index[o.task] for o in self._obs], np.int64)
         sizes = np.array([o.size for o in self._obs], np.float64)
         local = np.array([o.local_runtime for o in self._obs], np.float64)
         return idx, sizes, local
+
+    def by_tick(self, atol: float = 1e-12) -> list[tuple[float,
+                                                         list[Observation]]]:
+        """Group the stream by completion time (within ``atol``): the
+        same-tick batches the executor fed through ``observe_batch`` —
+        replaying tick by tick reproduces the online update sequence."""
+        out: list[tuple[float, list[Observation]]] = []
+        for o in self._obs:
+            if out and abs(o.time - out[-1][0]) <= atol:
+                out[-1][1].append(o)
+            else:
+                out.append((o.time, [o]))
+        return out

@@ -52,6 +52,8 @@ class ExecutionTrace:
     makespan: float = 0.0
     replans: int = 0
     surprises: int = 0
+    speculations: int = 0      # straggler copies launched (bias coupling)
+    spec_wins: int = 0         # copies that finished before the original
     observations: ObservationBuffer = field(default_factory=ObservationBuffer)
 
     def errors(self) -> np.ndarray:
@@ -85,13 +87,24 @@ class OnlineExecutor:
     confidence : predictive-interval mass for the surprise gate
     risk_k : uncertainty-aware HEFT knob (effective cost = mean + k·sigma)
     replan_cooldown : minimum completions between two re-plans
+    speculate : couple the bias posterior to straggler mitigation — a
+        still-running task that has outrun its dispatch-time envelope
+        (mean + spec_k·sigma) on a node whose learned (task, node) bias
+        has drifted past ``bias_drift`` gets a speculative copy on the
+        best idle node; whichever attempt finishes first wins, the loser
+        is killed and its node freed at that moment
+    spec_k : envelope multiplier for the overdue check
+    bias_drift : bias point-estimate threshold that marks a node as
+        systematically slow for the task (requires an estimator with a
+        ``bias_point`` method; pairs report 1.0 until observed)
     """
 
     def __init__(self, estimator, tasks: dict[str, SchedTask],
                  task_name: dict[str, str], size: float, grid: GridEngine,
                  runtime_fn, *, online: bool = True,
                  confidence: float = 0.9, risk_k: float = 0.0,
-                 replan_cooldown: int = 0):
+                 replan_cooldown: int = 0, speculate: bool = True,
+                 spec_k: float = 2.0, bias_drift: float = 1.15):
         self.est = estimator
         self.tasks = tasks
         self.task_name = task_name
@@ -102,6 +115,9 @@ class OnlineExecutor:
         self.confidence = confidence
         self.risk_k = risk_k
         self.replan_cooldown = replan_cooldown
+        self.speculate = speculate
+        self.spec_k = spec_k
+        self.bias_drift = bias_drift
         self.node_names = grid.names()
         # stable node-type column order for the estimate matrix
         seen: dict[str, None] = {}
@@ -169,6 +185,10 @@ class OnlineExecutor:
         cooldown = 0
         queues = self._plan(list(self.tasks), t, {})
         mean, std = self._estimates()
+        rec_idx: dict[str, int] = {}            # task id -> trace.records slot
+        running: dict[str, list[tuple[str, float]]] = {}   # active attempts
+        spec_run: dict[str, TaskRun] = {}       # pending copy's TaskRun
+        speculated: set[str] = set()
 
         def dispatch(t_now: float) -> bool:
             nonlocal seq
@@ -187,9 +207,11 @@ class OnlineExecutor:
                 self.grid.occupy(node, end)
                 heapq.heappush(heap, (end, seq, pick, node))
                 seq += 1
+                running[pick] = [(node, end)]
                 r, c = self._row[pick], self._type_idx[
                     self.grid.type_of(node).name]
                 expected_finish[pick] = t_now + float(mean[r, c])
+                rec_idx[pick] = len(trace.records)
                 trace.records.append(TaskRun(
                     id=pick, name=self.task_name[pick], node=node,
                     node_type=self.grid.type_of(node).name,
@@ -197,6 +219,52 @@ class OnlineExecutor:
                     pred_mean=float(mean[r, c]), pred_std=float(std[r, c])))
                 progressed = True
             return progressed
+
+        def speculate_stragglers(t_now: float) -> None:
+            """Bias-coupled straggler mitigation: the surprise gate already
+            told us a node is systematically slow for a task (its bias
+            posterior drifted high) — so a still-running instance of that
+            pair that has outrun its dispatch-time envelope gets a copy on
+            the best idle node, instead of only re-planning work that has
+            not started yet.  First finish wins; the loser is killed and
+            its node freed at that moment."""
+            bias_point = getattr(self.est, "bias_point", None)
+            if bias_point is None:
+                return
+            nonlocal seq
+            for tid, attempts in list(running.items()):
+                if tid in done or tid in speculated or len(attempts) != 1:
+                    continue
+                rec = trace.records[rec_idx[tid]]
+                envelope = rec.pred_mean + self.spec_k * max(
+                    rec.pred_std, 1e-9)
+                if t_now < rec.start + envelope:
+                    continue                      # not overdue yet
+                if bias_point(rec.name, rec.node_type) < self.bias_drift:
+                    continue                      # node not drifted for it
+                node = attempts[0][0]
+                idle = [n for n in self.grid.idle(t_now) if n != node]
+                if not idle:
+                    continue
+                r = self._row[tid]
+                alt = min(idle, key=lambda n: mean[
+                    r, self._type_idx[self.grid.type_of(n).name]])
+                dur = float(self.runtime_fn(tid, alt))
+                end = t_now + dur
+                self.grid.occupy(alt, end)
+                heapq.heappush(heap, (end, seq, tid, alt))
+                seq += 1
+                running[tid].append((alt, end))
+                speculated.add(tid)
+                c = self._type_idx[self.grid.type_of(alt).name]
+                spec_run[tid] = TaskRun(
+                    id=tid, name=self.task_name[tid], node=alt,
+                    node_type=self.grid.type_of(alt).name,
+                    start=t_now, end=end, runtime=dur,
+                    pred_mean=float(mean[r, c]), pred_std=float(std[r, c]))
+                expected_finish[tid] = min(expected_finish[tid],
+                                           t_now + float(mean[r, c]))
+                trace.speculations += 1
 
         while len(done) < len(self.tasks):
             while dispatch(t):
@@ -207,34 +275,66 @@ class OnlineExecutor:
                     f"execution stalled with {len(missing)} tasks blocked "
                     "(cyclic dependencies or unassigned tasks?)")
             end, _, tid, node = heapq.heappop(heap)
+            if tid in done:
+                continue                 # stale event of a killed attempt
             t = end
-            done[tid] = end
-            run = next(r for r in reversed(trace.records) if r.id == tid)
-            name = self.task_name[tid]
-            ntype = self.grid.type_of(node).name
-            cooldown = max(0, cooldown - 1)
+            # batch every completion landing on this tick: multi-node
+            # observations arriving together are absorbed by ONE scanned
+            # estimator update instead of per-observation calls
+            completions = [(tid, node, end)]
+            seen = {tid}
+            while heap and heap[0][0] <= t + 1e-12:
+                e2, _, tid2, node2 = heapq.heappop(heap)
+                if tid2 in done or tid2 in seen:
+                    continue             # stale, or a same-tick lost twin
+                completions.append((tid2, node2, e2))
+                seen.add(tid2)
+            for ctid, cnode, cend in completions:
+                done[ctid] = cend
+                # resolve the speculative race: kill the other attempts,
+                # free their nodes NOW, and let the winning run's record
+                # stand (predictions are the dispatch-time belief of the
+                # attempt that actually finished)
+                for n2, e2 in running.pop(ctid, []):
+                    if n2 != cnode:
+                        self.grid.release(n2, cend)
+                sr = spec_run.pop(ctid, None)
+                if sr is not None and sr.node == cnode:
+                    trace.records[rec_idx[ctid]] = sr
+                    trace.spec_wins += 1
+            cooldown = max(0, cooldown - len(completions))
             if self.online:
-                # surprise gate BEFORE the update: was the realised runtime
-                # outside what the dispatch-time posterior considered likely?
-                lo, hi = self.est.predict_interval_node(
-                    name, ntype, self.size, self.confidence)
-                surprised = not (lo <= run.runtime <= hi)
-                local_rt = self.est.observe(name, ntype, self.size,
-                                            run.runtime)
-                trace.observations.record(name, ntype, self.size,
-                                          run.runtime, local_rt, time=t)
+                # surprise gates BEFORE the update: was each realised
+                # runtime outside what the dispatch-time posterior (the
+                # tick-start belief) considered likely?
+                batch = []
+                gates = []
+                for ctid, cnode, _ in completions:
+                    run = trace.records[rec_idx[ctid]]
+                    name = self.task_name[ctid]
+                    ntype = self.grid.type_of(cnode).name
+                    lo, hi = self.est.predict_interval_node(
+                        name, ntype, self.size, self.confidence)
+                    gates.append(not (lo <= run.runtime <= hi))
+                    batch.append((name, ntype, self.size, run.runtime))
+                local_rts = self.est.observe_batch(batch)
+                for (name, ntype, _, runtime), local_rt in zip(batch,
+                                                               local_rts):
+                    trace.observations.record(name, ntype, self.size,
+                                              runtime, local_rt, time=t)
                 mean, std = self._estimates()     # dirty-row refresh only
+                trace.surprises += sum(gates)
                 unstarted = [x for x in self.tasks
                              if x not in started and x not in done]
-                if surprised:
-                    trace.surprises += 1
-                if surprised and unstarted and cooldown == 0:
+                if any(gates) and unstarted and cooldown == 0:
                     ext = {**done, **{k: max(v, t)
                                       for k, v in expected_finish.items()
                                       if k not in done}}
                     queues = self._plan(unstarted, t, ext)
                     trace.replans += 1
                     cooldown = self.replan_cooldown
+                if self.speculate:
+                    speculate_stragglers(t)
         trace.makespan = max(done.values()) if done else 0.0
         return trace
 

@@ -235,8 +235,13 @@ def simulate_with_stragglers(tasks, cost, nodes, true_runtime,
         mean, sigma = predictions[tid]
         envelope = mean + straggler_k * max(sigma, 1e-9)
         if speculative and dur > envelope:
-            # launch a copy at the envelope time on the best other node
-            others = [n for n in nodes if not n.startswith(node.split("/")[0])]
+            # launch a copy at the envelope time on the best other node,
+            # preferring a different node TYPE (the "type/i" prefix) —
+            # compare the type segment exactly: a prefix test would
+            # falsely exclude distinct nodes sharing a name prefix
+            # (e.g. "n1" knocking out "n10")
+            ntype = node.split("/")[0]
+            others = [n for n in nodes if n.split("/")[0] != ntype]
             others = others or [n for n in nodes if n != node]
             alt = min(others, key=lambda n: cost[tid][n]) if others else node
             alt_st = max(node_free[alt], st + envelope)
@@ -246,7 +251,10 @@ def simulate_with_stragglers(tasks, cost, nodes, true_runtime,
                 mitigated += 1
                 finish[tid] = alt_ft
                 node_free[alt] = alt_ft
-                node_free[node] = min(orig_ft, alt_ft)  # original killed
+                # the original is killed the moment the straggler is
+                # detected (envelope exceeded), freeing its node then —
+                # not when either attempt would have finished
+                node_free[node] = st + envelope
                 continue
         finish[tid] = st + dur
         node_free[node] = st + dur

@@ -144,6 +144,12 @@ class GridEngine:
     def occupy(self, name: str, until: float) -> None:
         self.nodes[name].busy_until = until
 
+    def release(self, name: str, at: float) -> None:
+        """Free a node earlier than its booked end — a running attempt was
+        killed (e.g. a speculative-copy race resolved elsewhere)."""
+        sn = self.nodes[name]
+        sn.busy_until = min(sn.busy_until, at)
+
     def idle(self, t: float) -> list[str]:
         return [n for n, sn in self.nodes.items()
                 if sn.alive and sn.busy_until <= t + 1e-12]

@@ -1,0 +1,303 @@
+"""Per-(task, node) residual bias layer: conjugate posterior behaviour,
+MPE reduction under injected multiplicative skew, dirty-row cache
+correctness with bias folding, observe_batch/sequential equivalence,
+schema-v3 persistence, and the bias-coupled straggler speculation."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import SCHEMA_VERSION, BiasModel, LotaruEstimator
+from repro.core.profiler import BenchResult
+from repro.online import OnlineExecutor, fanout_chain_dag
+from repro.sched.simulator import GridEngine
+from repro.core.nodes import get_node
+
+
+def _bench(name, cpu, io):
+    return BenchResult(node=name, cpu_events_s=cpu, matmul_gflops=100.0,
+                       mem_gbps=20.0, io_read_mbps=io, io_write_mbps=io,
+                       link_gbps=0.0)
+
+
+def _fitted(seed=0, n_tasks=5, bias_correction=True):
+    rng = np.random.default_rng(seed)
+    local = _bench("local-cpu", 450.0, 420.0)
+    benches = {f"n{j}": _bench(f"n{j}", float(rng.uniform(150, 900)),
+                               float(rng.uniform(100, 900)))
+               for j in range(3)}
+    est = LotaruEstimator(local, benches, bias_correction=bias_correction)
+    slopes = {f"t{i}": (i + 1) * 2.0 for i in range(n_tasks)}
+    est.fit_tasks(list(slopes), 64.0,
+                  lambda n, s, cf: slopes[n] * s / cf + 5.0,
+                  n_partitions=8)
+    return est
+
+
+# ---------------------------------------------------------------------------
+# BiasModel unit behaviour
+# ---------------------------------------------------------------------------
+def test_bias_shrinks_toward_one_and_tightens():
+    bm = BiasModel(2, 2)
+    assert bm.point(0, 0) == 1.0                      # inert before evidence
+    true_log = np.log(1.5)
+    last = None
+    for k in range(1, 30):
+        bm.update([0], [0], [true_log])
+        b = bm.point(0, 0)
+        assert 1.0 < b < 1.5 + 1e-9                   # shrunk toward 1.0
+        if last is not None:
+            assert b >= last - 1e-12                  # monotone approach
+        last = b
+    _, v = bm.posterior()
+    assert v[0, 0] < bm.tau0 ** 2                     # tighter than prior
+    assert bm.point(0, 0) == pytest.approx(1.5, rel=0.05)
+    assert bm.point(1, 1) == 1.0                      # other pairs untouched
+
+
+def test_bias_fold_scalar_matches_matrix():
+    bm = BiasModel(3, 2)
+    bm.update([1, 1, 2], [0, 0, 1], np.log([1.4, 1.6, 0.7]))
+    mean = np.arange(1.0, 7.0).reshape(3, 2)
+    std = 0.1 * mean
+    folded_mean = mean * bm.matrix()
+    folded_std = bm.widen_std(mean, std)
+    for i in range(3):
+        for j in range(2):
+            m, s = bm.fold_scalar(i, j, mean[i, j], std[i, j])
+            assert m == pytest.approx(folded_mean[i, j], rel=1e-12)
+            assert s == pytest.approx(folded_std[i, j], rel=1e-12)
+    # unobserved pairs pass through bitwise
+    assert folded_mean[0, 0] == mean[0, 0]
+    assert folded_std[0, 0] == std[0, 0]
+
+
+def test_bias_interval_scale_widens_with_uncertainty():
+    bm = BiasModel(1, 1)
+    bm.update([0], [0], [np.log(1.3)])
+    lo1, hi1 = bm.interval_scale(0, 0, z=1.645)
+    assert lo1 < bm.point(0, 0) < hi1
+    for _ in range(50):
+        bm.update([0], [0], [np.log(1.3)])
+    lo2, hi2 = bm.interval_scale(0, 0, z=1.645)
+    assert (hi2 - lo2) < (hi1 - lo1)                  # evidence narrows it
+
+
+def test_bias_residual_spread_recovers_noise_sd():
+    rng = np.random.default_rng(0)
+    bm = BiasModel(4, 3)
+    assert np.isnan(bm.residual_spread())          # no pair has 2 obs yet
+    true_sd = 0.2
+    for _ in range(400):
+        i, j = int(rng.integers(4)), int(rng.integers(3))
+        pair_mean = 0.3 * (i - j)                  # arbitrary per-pair bias
+        bm.update([i], [j], [pair_mean + rng.normal(0, true_sd)])
+    assert bm.residual_spread() == pytest.approx(true_sd, rel=0.15)
+
+
+# ---------------------------------------------------------------------------
+# Estimator integration
+# ---------------------------------------------------------------------------
+def _skew(n_tasks, n_nodes, seed=42, scale=0.35):
+    rng = np.random.default_rng(seed)
+    return np.exp(rng.normal(0.0, scale, (n_tasks, n_nodes)))
+
+
+def test_bias_correction_reduces_mpe_under_injected_skew():
+    """Ground truth carries a fixed per-(task, node) multiplicative skew
+    the factor adjustment cannot represent: the bias-corrected estimator
+    drives per-pair error toward zero, the bias-free one cannot."""
+    truth = _fitted(seed=9)                       # frozen initial beliefs
+    skew = _skew(len(truth.task_names()), 3)
+    nodes = list(truth.target_benches)
+
+    def run_stream(est):
+        for size in (24.0, 36.0, 48.0, 56.0):
+            batch = []
+            for i, tn in enumerate(truth.task_names()):
+                for j, nd in enumerate(nodes):
+                    m, _ = truth.predict(tn, nd, size)
+                    batch.append((tn, nd, size, m * skew[i, j]))
+            est.observe_batch(batch)
+
+    est_bias = _fitted(seed=9, bias_correction=True)
+    est_plain = _fitted(seed=9, bias_correction=False)
+    run_stream(est_bias)
+    run_stream(est_plain)
+
+    size_q = 40.0
+    M_truth, _ = truth.predict_matrix(nodes, size_q)
+    target = M_truth * skew
+    M_b, _ = est_bias.predict_matrix(nodes, size_q)
+    M_p, _ = est_plain.predict_matrix(nodes, size_q)
+    err_b = np.median(np.abs(M_b - target) / target)
+    err_p = np.median(np.abs(M_p - target) / target)
+    assert err_b < err_p
+    assert err_b < 0.05
+
+
+def test_dirty_row_cache_correct_with_bias_updates():
+    est = _fitted(seed=1)
+    nodes = list(est.target_benches)
+    M1, S1 = est.predict_matrix(nodes, 32.0)
+    i = est.task_names().index("t2")
+    est.observe("t2", nodes[1], 32.0, 500.0)
+    M2, S2 = est.predict_matrix(nodes, 32.0)          # row-patched + folded
+    others = [k for k in range(len(est.task_names())) if k != i]
+    assert np.array_equal(M2[others], M1[others])     # bitwise clean rows
+    assert np.array_equal(S2[others], S1[others])
+    assert not np.allclose(M2[i], M1[i])
+    est._mat_cache = None
+    M3, S3 = est.predict_matrix(nodes, 32.0)          # from-scratch oracle
+    np.testing.assert_allclose(M2, M3, rtol=1e-6)
+    np.testing.assert_allclose(S2, S3, rtol=1e-6)
+    # scalar oracle agrees with the bias-folded matrix cell
+    m, s = est.predict("t2", nodes[1], 32.0)
+    assert M2[i, 1] == pytest.approx(m, rel=1e-6)
+    assert S2[i, 1] == pytest.approx(s, rel=1e-6)
+    # std of the observed pair is WIDENED by the bias posterior
+    assert S2[i, 1] > 0
+
+
+def test_observe_batch_matches_sequential_observes():
+    """One tick over distinct tasks is exactly N sequential observes:
+    same de-adjusted runtimes, same bias state, same predictions."""
+    obs = [("t0", "n0", 30.0, 140.0), ("t1", "n1", 28.0, 260.0),
+           ("t2", "n2", 35.0, 410.0), ("t3", "n0", 31.0, 515.0)]
+    est_seq = _fitted(seed=5)
+    est_bat = _fitted(seed=5)
+    seq_rts = [est_seq.observe(*o) for o in obs]
+    bat_rts = est_bat.observe_batch(obs)
+    np.testing.assert_allclose(bat_rts, seq_rts, rtol=1e-12)
+    np.testing.assert_allclose(est_bat.bias.counts, est_seq.bias.counts,
+                               rtol=0)
+    np.testing.assert_allclose(est_bat.bias.log_sum, est_seq.bias.log_sum,
+                               rtol=1e-12)
+    nodes = list(est_seq.target_benches)
+    Ms, Ss = est_seq.predict_matrix(nodes, 33.0)
+    Mb, Sb = est_bat.predict_matrix(nodes, 33.0)
+    np.testing.assert_allclose(Mb, Ms, rtol=1e-12)
+    np.testing.assert_allclose(Sb, Ss, rtol=1e-12)
+
+
+def test_interval_widened_by_bias_uncertainty():
+    est = _fitted(seed=3)
+    node = list(est.target_benches)[0]
+    lo0, hi0 = est.predict_interval_node("t1", node, 32.0, confidence=0.9)
+    m0, _ = est.predict("t1", node, 32.0)
+    est.observe("t1", node, 32.0, m0 * 1.6)           # high residual
+    lo1, hi1 = est.predict_interval_node("t1", node, 32.0, confidence=0.9)
+    b = est.bias_point("t1", node)
+    assert b > 1.0
+    # interval shifted up with the bias AND wider than a pure shift
+    assert hi1 > hi0 * b - 1e-9
+    assert (hi1 - lo1) > (hi0 - lo0) * b * 0.999
+
+
+# ---------------------------------------------------------------------------
+# Persistence (schema v3)
+# ---------------------------------------------------------------------------
+def test_save_load_roundtrips_bias_state(tmp_path):
+    est = _fitted(seed=7)
+    nodes = list(est.target_benches)
+    m, _ = est.predict("t0", nodes[0], 30.0)
+    est.observe_batch([("t0", nodes[0], 30.0, m * 1.3),
+                       ("t1", nodes[1], 25.0, 180.0)])
+    p = tmp_path / "est.json"
+    est.save(p)
+    d = json.loads(p.read_text())
+    assert d["version"] == SCHEMA_VERSION == 3
+    assert d["bias"] is not None
+    loaded = LotaruEstimator.load(p)
+    assert np.array_equal(loaded.bias.counts, est.bias.counts)
+    assert np.array_equal(loaded.bias.log_sum, est.bias.log_sum)
+    assert loaded.bias_nodes == est.bias_nodes
+    M0, S0 = est.predict_matrix(nodes, 40.0)
+    M1, S1 = loaded.predict_matrix(nodes, 40.0)
+    np.testing.assert_allclose(M1, M0, rtol=5e-4, atol=1e-6)
+    np.testing.assert_allclose(S1, S0, rtol=5e-4, atol=1e-6)
+    assert loaded.bias_point("t0", nodes[0]) == est.bias_point("t0", nodes[0])
+
+
+def test_v2_file_without_bias_still_loads(tmp_path):
+    est = _fitted(seed=8)
+    p = tmp_path / "v2.json"
+    est.save(p)
+    d = json.loads(p.read_text())
+    d["version"] = 2
+    del d["bias"]
+    del d["bias_correction"]
+    p.write_text(json.dumps(d))
+    loaded = LotaruEstimator.load(p)
+    assert loaded.bias is None                        # fresh (inert) layer
+    node = list(loaded.target_benches)[0]
+    assert loaded.bias_point("t0", node) == 1.0
+    m0, _ = est.predict("t0", node, 40.0)
+    m1, _ = loaded.predict("t0", node, 40.0)
+    assert m1 == pytest.approx(m0, rel=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# Straggler coupling (speculative copies in the executor)
+# ---------------------------------------------------------------------------
+def _spec_scenario(online=True, speculate=True):
+    """One node type is secretly 3x slower: completions there drive the
+    (task, node) bias high, and still-running instances on that type
+    blow their dispatch-time envelope -> speculative copies."""
+    rng = np.random.default_rng(17)
+    local = _bench("local-cpu", 450.0, 420.0)
+    benches = {"tpu-v2": _bench("tpu-v2", 600.0, 500.0),
+               "tpu-v3": _bench("tpu-v3", 650.0, 550.0)}
+    est = LotaruEstimator(local, benches)
+    slopes = {f"t{i}": (i + 1) * 2.0 for i in range(3)}
+    est.fit_tasks(list(slopes), 64.0,
+                  lambda n, s, cf: slopes[n] * s / cf + 5.0,
+                  n_partitions=8)
+    truth = LotaruEstimator(local, benches)
+    truth.fit_tasks(list(slopes), 64.0,
+                    lambda n, s, cf: slopes[n] * s / cf + 5.0,
+                    n_partitions=8)
+    tasks, task_name = fanout_chain_dag(list(slopes), 8)
+    grid = GridEngine.from_types(nodes_per_type=2,
+                                 types=[get_node("tpu-v2"),
+                                        get_node("tpu-v3")])
+    size = 32.0
+
+    def runtime_fn(tid, node):
+        nt = grid.type_of(node).name
+        m, _ = truth.predict(task_name[tid], nt, size)
+        slow = 3.0 if nt == "tpu-v2" else 1.0
+        return m * slow * float(rng.uniform(0.98, 1.02))
+
+    return OnlineExecutor(est, tasks, task_name, size, grid, runtime_fn,
+                          online=online, confidence=0.2,
+                          speculate=speculate, spec_k=2.0, bias_drift=1.1)
+
+
+def test_bias_drift_triggers_speculative_copies():
+    trace = _spec_scenario().run()
+    assert len(trace.records) == 24                   # one record per task
+    assert trace.speculations > 0
+    assert trace.spec_wins <= trace.speculations
+    # every record reflects the attempt that actually finished
+    by_id = {r.id: r for r in trace.records}
+    for tid, rec in by_id.items():
+        sample, name = tid.split(".", 1)
+        k = int(name[1:])
+        if k > 0:
+            assert rec.start >= by_id[f"{sample}.t{k-1}"].end - 1e-9
+    assert trace.makespan == pytest.approx(max(r.end for r in by_id.values()))
+
+
+def test_speculation_off_keeps_pr2_loop():
+    trace = _spec_scenario(speculate=False).run()
+    assert trace.speculations == 0 and trace.spec_wins == 0
+    assert len(trace.records) == 24
+
+
+def test_speculation_helps_makespan_or_is_neutral():
+    with_spec = _spec_scenario(speculate=True).run()
+    without = _spec_scenario(speculate=False).run()
+    # the copy only ever replaces a run that would have finished later,
+    # so mitigation can't lose by construction of the race
+    assert with_spec.makespan <= without.makespan * 1.05

@@ -73,6 +73,33 @@ def test_decode_consistent_with_full_forward(arch):
         np.asarray(logits_dec[:, -1], np.float32), atol=3e-2, rtol=3e-2)
 
 
+@pytest.mark.parametrize("arch", ["zamba2-1.2b", "mamba2-1.3b"])
+def test_decode_consistent_second_length(arch):
+    """Regression for the zamba2 decode divergence: the decode step's
+    depthwise conv ran as an fp32 einsum while prefill quantised through
+    the bf16 conv kernel; the per-layer ulp drift was amplified past
+    tolerance by the hybrid's shared-attention blocks.  Decode now routes
+    through the same conv op.  T2+1 = 18 also lands one token past the
+    smoke SSD chunk (16), exercising the chunked scan's pad path + carry."""
+    T2 = 17
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (B, T2 + 1), 0,
+                                cfg.vocab)
+    caches_full = model.init_caches(B, max_len=T2 + 1)
+    logits_full, _ = model.prefill(params, {"tokens": tokens}, caches_full,
+                                   RULES)
+    caches = model.init_caches(B, max_len=T2 + 1)
+    _, caches = model.prefill(params, {"tokens": tokens[:, :T2]}, caches,
+                              RULES)
+    logits_dec, _ = model.decode(params, {"tokens": tokens[:, T2:]}, caches,
+                                 jnp.asarray(T2, jnp.int32), RULES)
+    np.testing.assert_allclose(
+        np.asarray(logits_full[:, -1], np.float32),
+        np.asarray(logits_dec[:, -1], np.float32), atol=3e-2, rtol=3e-2)
+
+
 def test_param_counts_match_published_sizes():
     """Analytic param counts of the full configs land near the published
     model sizes (sanity for roofline MODEL_FLOPS)."""

@@ -280,6 +280,25 @@ def test_observation_buffer_replay_arrays():
     assert set(buf.per_task()) == {"a", "b"}
 
 
+def test_observation_buffer_unknown_task_names_offender():
+    buf = ObservationBuffer()
+    buf.record("a", "n0", 8.0, 10.0, 5.0, time=1.0)
+    buf.record("rogue", "n1", 8.0, 20.0, 7.0, time=2.0)
+    with pytest.raises(ValueError, match="rogue"):
+        buf.arrays({"a": 0, "b": 1})
+
+
+def test_observation_buffer_by_tick_groups_same_time():
+    buf = ObservationBuffer()
+    buf.record("a", "n0", 8.0, 10.0, 5.0, time=1.0)
+    buf.record("b", "n1", 8.0, 20.0, 7.0, time=1.0)
+    buf.record("a", "n1", 8.0, 30.0, 6.0, time=2.5)
+    ticks = buf.by_tick()
+    assert [t for t, _ in ticks] == [1.0, 2.5]
+    assert [len(g) for _, g in ticks] == [2, 1]
+    assert {o.task for o in ticks[0][1]} == {"a", "b"}
+
+
 # ---------------------------------------------------------------------------
 # Event-driven executor
 # ---------------------------------------------------------------------------

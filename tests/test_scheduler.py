@@ -82,3 +82,52 @@ def test_detect_stragglers_threshold():
     preds = {"a": (9.0, 1.0), "b": (9.0, 1.0)}
     out = detect_stragglers(records, preds, k=3.0)
     assert out == ["b"]
+
+
+def test_straggler_copy_node_filter_not_prefix_fooled():
+    """Regression: the speculative-copy node filter compared name PREFIXES,
+    so "n1" excluded the distinct node "n10" (and with a third node
+    present the fallback never kicked in) — the copy landed on the far
+    worse "n2" instead of the eligible "n10"."""
+    from repro.sched.heft import simulate_with_stragglers
+    tasks = {"a": SchedTask(id="a")}
+    nodes = ["n1", "n10", "n2"]
+    cost = {"a": {"n1": 5.0, "n10": 6.0, "n2": 50.0}}
+    preds = {"a": (10.0, 0.1)}
+
+    def true_runtime(tid, node):
+        return {"n1": 100.0, "n10": 5.0, "n2": 50.0}[node]
+
+    r = simulate_with_stragglers(tasks, cost, nodes, true_runtime, preds,
+                                 straggler_k=3.0)
+    assert r["mitigated"] == 1
+    # HEFT picks n1 (cheapest estimate); it straggles past the envelope
+    # 10 + 3*0.1; the copy must go to n10 (cheapest OTHER node) and land
+    # at 10.3 + 5 — the prefix filter would have sent it to n2 (60.3)
+    assert r["makespan"] == pytest.approx(10.3 + 5.0, abs=1e-6)
+
+
+def test_straggler_kill_frees_node_at_detection_time():
+    """The killed original releases its node when the straggler is
+    DETECTED (st + envelope), so queued work behind it starts then — not
+    at the time either attempt would have finished."""
+    from repro.sched.heft import simulate_with_stragglers
+    tasks = {"a": SchedTask(id="a"), "b": SchedTask(id="b")}
+    # two independent tasks; estimates put both on fast/0, b after a
+    nodes = ["fast/0", "alt/0"]
+    cost = {"a": {"fast/0": 10.0, "alt/0": 30.0},
+            "b": {"fast/0": 10.0, "alt/0": 30.0}}
+    preds = {"a": (10.0, 0.1), "b": (10.0, 0.1)}
+
+    def true_runtime(tid, node):
+        if tid == "a" and node == "fast/0":
+            return 100.0                          # a straggles on fast/0
+        return 10.0
+
+    r = simulate_with_stragglers(tasks, cost, nodes, true_runtime, preds,
+                                 straggler_k=3.0)
+    assert r["mitigated"] == 1
+    # a: copy on alt/0 at detection 10.3, finishes 20.3; fast/0 freed at
+    # 10.3 so b runs 10.3 -> 20.3; the old min(orig_ft, alt_ft) rule
+    # would have held fast/0 until 20.3 and pushed b to 30.3
+    assert r["makespan"] == pytest.approx(20.3, abs=1e-6)
