@@ -13,11 +13,16 @@ Three measurements:
    workflows on the heterogeneous cluster (ground truth carries the
    simulator's systematic per-(task, node) efficiency the initial factor
    adjustment cannot see — exactly what streaming observations recover).
-   Three arms per workflow: static (frozen predictions), online without
-   the bias layer (the PR 2 loop), and online with the per-(task, node)
-   bias posterior + same-tick batching + bias-coupled straggler copies —
-   the bias arm must beat the PR 2 arm's final MPE on most workflows
-   (the systematic efficiency IS a per-pair multiplicative bias).
+   Four arms per workflow: static (frozen predictions), online without
+   the bias layer (the PR 2 loop), online with the per-(task, node)
+   bias posterior + same-tick batching + bias-coupled straggler copies
+   (the PR 3 loop), and the risk-aware arm — bias + empirical-Bayes
+   sigma_r pooling + uncertainty-priced HEFT (effective cost
+   mean + risk_k * widened sigma) + tail-mass speculative admission.
+   The bias arm must beat the PR 2 arm's final MPE on most workflows
+   (the systematic efficiency IS a per-pair multiplicative bias), and
+   the risk arm must win or tie the bias arm's final makespan on most
+   workflows (pricing posterior width steers work off jittery pairs).
 """
 from __future__ import annotations
 
@@ -143,6 +148,10 @@ def bench_equivalence(n_tasks: int = 200, per_task: int = 5, seed: int = 2):
             "pearson_gate_equal": gate_equal}
 
 
+RISK_K = 1.0        # risk-aware arm: effective cost = mean + RISK_K * sigma
+SPEC_TAIL = 0.8     # tail-mass admission: P(bias > drift) >= 0.8
+
+
 def bench_workflows(n_samples: int = 8, nodes_per_type: int = 2,
                     seed: int = 0):
     local = get_node("local-cpu")
@@ -160,10 +169,12 @@ def bench_workflows(n_samples: int = 8, nodes_per_type: int = 2,
                                                     nt, size)
                      for tid in tasks for nt in target_nodes()}
 
-        def make_executor(online: bool, bias_correction: bool = True):
+        def make_executor(online: bool, bias_correction: bool = True,
+                          risk: bool = False):
             sim = ClusterSimulator(seed=seed)     # same local runs each time
             est = LotaruEstimator(local_bench, tbenches,
-                                  bias_correction=bias_correction)
+                                  bias_correction=bias_correction,
+                                  bias_empirical_bayes=risk)
             est.fit_tasks(list(by_name), size,
                           lambda n, s, cf: sim.run_task(by_name[n], local, s,
                                                         cpu_factor=cf))
@@ -171,11 +182,14 @@ def bench_workflows(n_samples: int = 8, nodes_per_type: int = 2,
             return OnlineExecutor(
                 est, tasks, task_name, size, grid,
                 lambda tid, node: truth_tab[(tid, grid.type_of(node).name)],
-                online=online, confidence=0.9)
+                online=online, confidence=0.9,
+                risk_k=RISK_K if risk else 0.0,
+                spec_tail=SPEC_TAIL if risk else None)
 
         static = make_executor(online=False).run()
         nobias = make_executor(online=True, bias_correction=False).run()
         online = make_executor(online=True).run()
+        risk = make_executor(online=True, risk=True).run()
         traj_s = static.cumulative_mpe()
         traj_o = online.cumulative_mpe()
         results[wf] = {
@@ -183,9 +197,11 @@ def bench_workflows(n_samples: int = 8, nodes_per_type: int = 2,
             "makespan_static": static.makespan,
             "makespan_online_nobias": nobias.makespan,
             "makespan_online": online.makespan,
+            "makespan_online_risk": risk.makespan,
             "mpe_static": static.final_mpe(),
             "mpe_online_nobias": nobias.final_mpe(),
             "mpe_online": online.final_mpe(),
+            "mpe_online_risk": risk.final_mpe(),
             "mpe_traj_static_first_last": [float(traj_s[0]),
                                            float(traj_s[-1])],
             "mpe_traj_online_first_last": [float(traj_o[0]),
@@ -194,6 +210,9 @@ def bench_workflows(n_samples: int = 8, nodes_per_type: int = 2,
             "surprises": online.surprises,
             "speculations": online.speculations,
             "spec_wins": online.spec_wins,
+            "risk_replans": risk.replans,
+            "risk_speculations": risk.speculations,
+            "risk_spec_wins": risk.spec_wins,
         }
     wins = sum(1 for r in results.values()
                if r["mpe_online"] < r["mpe_static"])
@@ -201,10 +220,17 @@ def bench_workflows(n_samples: int = 8, nodes_per_type: int = 2,
                     if r["mpe_online"] < r["mpe_online_nobias"])
     makespan_wins = sum(1 for r in results.values()
                         if r["makespan_online"] <= r["makespan_static"])
+    # win-or-tie: risk pricing may leave a placement unchanged (same
+    # argmin), which is success, not failure — ties count
+    risk_makespan_wins = sum(
+        1 for r in results.values()
+        if r["makespan_online_risk"] <= r["makespan_online"] * (1 + 1e-9))
     return {"workflows": results, "n_samples": n_samples,
             "nodes_per_type": nodes_per_type,
+            "risk_k": RISK_K, "spec_tail": SPEC_TAIL,
             "online_mpe_wins": wins, "bias_mpe_wins": bias_wins,
             "online_makespan_wins": makespan_wins,
+            "risk_makespan_wins": risk_makespan_wins,
             "n_workflows": len(results)}
 
 
@@ -227,13 +253,18 @@ def run(n_tasks: int = 1000, n_samples: int = 8,
     for name, r in wf["workflows"].items():
         print(f"  {name:10s} MPE {r['mpe_static']:.3f} -> "
               f"{r['mpe_online_nobias']:.3f} (PR2) -> "
-              f"{r['mpe_online']:.3f} (bias)  "
+              f"{r['mpe_online']:.3f} (bias) -> "
+              f"{r['mpe_online_risk']:.3f} (risk)  "
               f"makespan {r['makespan_static']:.0f} "
-              f"-> {r['makespan_online']:.0f}  "
+              f"-> {r['makespan_online']:.0f} "
+              f"-> {r['makespan_online_risk']:.0f} (risk)  "
               f"(replans {r['replans']}/{r['surprises']} surprises, "
-              f"{r['speculations']} spec/{r['spec_wins']} won)")
+              f"{r['speculations']} spec/{r['spec_wins']} won; risk "
+              f"{r['risk_speculations']} spec)")
     print(f"online MPE wins: {wf['online_mpe_wins']}/{wf['n_workflows']}  "
-          f"bias-vs-PR2 wins: {wf['bias_mpe_wins']}/{wf['n_workflows']}")
+          f"bias-vs-PR2 wins: {wf['bias_mpe_wins']}/{wf['n_workflows']}  "
+          f"risk makespan win-or-tie: "
+          f"{wf['risk_makespan_wins']}/{wf['n_workflows']}")
     print(f"wrote {OUT}")
     return [("bench_online.update_throughput", thr["update_s"] * 1e6,
              f"speedup={thr['update_speedup_vs_refit']:.0f}x"),
@@ -243,7 +274,9 @@ def run(n_tasks: int = 1000, n_samples: int = 8,
             ("bench_online.mpe_wins", 0.0,
              f"{wf['online_mpe_wins']}/{wf['n_workflows']}"),
             ("bench_online.bias_mpe_wins", 0.0,
-             f"{wf['bias_mpe_wins']}/{wf['n_workflows']}")]
+             f"{wf['bias_mpe_wins']}/{wf['n_workflows']}"),
+            ("bench_online.risk_makespan_wins", 0.0,
+             f"{wf['risk_makespan_wins']}/{wf['n_workflows']}")]
 
 
 if __name__ == "__main__":

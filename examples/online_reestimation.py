@@ -21,7 +21,10 @@ The flow is the full closed loop of the online subsystem:
 
 Two baselines run the same scenario: the static plan with frozen
 predictions, and the PR-2 online loop with the bias layer disabled
-(``bias_correction=False``).
+(``bias_correction=False``).  A fourth, risk-aware arm closes the loop
+the paper only gestures at: empirical-Bayes pooling of the bias noise
+scale, HEFT placement on the effective cost mean + risk_k * widened
+sigma, and speculative admission from the bias posterior's tail mass.
 """
 import numpy as np
 
@@ -53,30 +56,33 @@ def main():
 
     estimators = {}
 
-    def make_executor(online, bias_correction=True):
+    def make_executor(online, bias_correction=True, risk=False):
         sim = ClusterSimulator(seed=0)
         est = LotaruEstimator(local_bench, tbenches,
-                              bias_correction=bias_correction)
+                              bias_correction=bias_correction,
+                              bias_empirical_bayes=risk)
         est.fit_tasks(list(by_name), size,
                       lambda n, s, cf: sim.run_task(by_name[n], local, s,
                                                     cpu_factor=cf))
         grid = GridEngine.from_types(nodes_per_type=2)
-        estimators[(online, bias_correction)] = est
+        estimators[(online, bias_correction, risk)] = est
         return OnlineExecutor(
             est, tasks, task_name, size, grid,
             lambda tid, node: truth_tab[(tid, grid.type_of(node).name)],
-            online=online, confidence=0.9, speculate=True)
+            online=online, confidence=0.9, speculate=True,
+            risk_k=1.0 if risk else 0.0, spec_tail=0.8 if risk else None)
 
     static = make_executor(online=False).run()
     pr2 = make_executor(online=True, bias_correction=False).run()
     online = make_executor(online=True).run()
+    risk = make_executor(online=True, risk=True).run()
 
     print(f"{WORKFLOW} x {N_SAMPLES} samples "
           f"({len(tasks)} task instances) on the heterogeneous cluster\n")
     print(f"{'':14s} {'makespan':>10s} {'final MPE':>10s} "
           f"{'replans':>8s} {'surprises':>10s} {'spec/won':>9s}")
     for label, tr in (("static", static), ("online (PR2)", pr2),
-                      ("online+bias", online)):
+                      ("online+bias", online), ("bias+risk", risk)):
         print(f"{label:14s} {tr.makespan:10.0f} {tr.final_mpe():10.3f} "
               f"{tr.replans:8d} {tr.surprises:10d} "
               f"{tr.speculations:4d}/{tr.spec_wins:d}")
@@ -88,7 +94,7 @@ def main():
     print("  static    :", "".join(f"{v:8.3f}" for v in ts[::10]))
     print("  online    :", "".join(f"{v:8.3f}" for v in to[::10]))
 
-    est = estimators[(True, True)]
+    est = estimators[(True, True, False)]
     bias = est.bias
     obs_pairs = int((bias.counts > 0).sum())
     b = bias.matrix()
@@ -108,6 +114,13 @@ def main():
     print(f"\nonline estimation cut the median prediction error by "
           f"{100 * gain:.0f}% vs the static plan "
           f"({100 * gain2:.0f}% of it from the bias layer).")
+
+    est_risk = estimators[(True, True, True)]
+    print(f"risk-aware arm: makespan {risk.makespan:.0f} vs "
+          f"{online.makespan:.0f} (bias), EB-pooled sigma_r = "
+          f"{est_risk.bias.effective_sigma_r():.3f} "
+          f"(configured {est_risk.bias.sigma_r}), "
+          f"{risk.speculations} tail-mass speculations")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,16 @@
 """CI perf gate over BENCH_online.json (written by bench_online --gate).
 
-Fails the build when either online-estimation win regresses:
+Fails the build when an online-estimation win regresses, and names the
+arm and the specific workflows that regressed (a bare pass/fail count is
+useless when bisecting which workflow moved):
 
 * online-vs-static final MPE must win on ALL workflows (PR 2 invariant);
 * bias-corrected online must beat the bias-free (PR 2) online final MPE
-  on >= 3 of the 5 workflows (PR 3 invariant).
+  on >= 3 of the 5 workflows (PR 3 invariant);
+* the risk-aware arm (bias + EB sigma_r + risk_k HEFT + tail-mass
+  speculation) must win or tie the bias arm's final makespan on >= 3 of
+  the 5 workflows (PR 4 invariant; ties count — risk pricing that leaves
+  the argmin placement unchanged is not a regression).
 """
 import json
 import sys
@@ -12,21 +18,55 @@ from pathlib import Path
 
 BENCH = Path(__file__).resolve().parents[1] / "BENCH_online.json"
 
+#: gate name -> (per-workflow pass predicate, minimum wins required as a
+#: fraction of n (1.0 = all), key of the bench's own summary count).
+#: Each predicate sees one workflow's record; the summary key is
+#: cross-checked so the gate and bench_online cannot silently disagree
+#: about what counts as a win.
+GATES = {
+    "online-vs-static MPE": (
+        lambda r: r["mpe_online"] < r["mpe_static"], 1.0,
+        "online_mpe_wins"),
+    "bias-vs-PR2 MPE": (
+        lambda r: r["mpe_online"] < r["mpe_online_nobias"], 0.6,
+        "bias_mpe_wins"),
+    "risk-vs-bias makespan (win-or-tie)": (
+        lambda r: r["makespan_online_risk"]
+        <= r["makespan_online"] * (1 + 1e-9), 0.6,
+        "risk_makespan_wins"),
+}
+
 
 def main() -> int:
     e = json.loads(BENCH.read_text())["execution"]
+    wfs = e["workflows"]
     n = e["n_workflows"]
     ok = True
-    if e["online_mpe_wins"] != n:
-        print(f"FAIL online-vs-static MPE wins {e['online_mpe_wins']}/{n} "
-              "(expected all)")
-        ok = False
-    if e["bias_mpe_wins"] < 3:
-        print(f"FAIL bias-vs-PR2 MPE wins {e['bias_mpe_wins']}/{n} "
-              "(expected >= 3)")
-        ok = False
-    print(f"online {e['online_mpe_wins']}/{n}, bias {e['bias_mpe_wins']}/{n}"
-          + ("" if ok else " -- GATE FAILED"))
+    for name, (pred, frac, summary_key) in GATES.items():
+        need = max(1, int(round(frac * n)))
+        losers = [wf for wf, r in wfs.items() if not pred(r)]
+        wins = n - len(losers)
+        status = "ok  " if wins >= need else "FAIL"
+        print(f"{status} {name}: {wins}/{n} (need >= {need})")
+        if wins < need:
+            ok = False
+        if summary_key in e and e[summary_key] != wins:
+            print(f"FAIL {name}: gate recount {wins} != bench summary "
+                  f"{summary_key}={e[summary_key]} — the two win "
+                  "definitions have drifted apart")
+            ok = False
+        for wf in losers:
+            r = wfs[wf]
+            detail = (f"static={r['mpe_static']:.3f} "
+                      f"PR2={r['mpe_online_nobias']:.3f} "
+                      f"bias={r['mpe_online']:.3f} "
+                      f"risk={r['mpe_online_risk']:.3f} | makespan "
+                      f"bias={r['makespan_online']:.0f} "
+                      f"risk={r['makespan_online_risk']:.0f}")
+            marker = "regressed" if wins < need else "lost (within budget)"
+            print(f"       {wf}: {marker} — {detail}")
+    if not ok:
+        print("-- GATE FAILED")
     return 0 if ok else 1
 
 

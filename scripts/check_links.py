@@ -1,0 +1,80 @@
+"""Markdown link checker for README.md and docs/ (CI step, no network).
+
+Checks every inline markdown link/image in the doc set:
+
+* relative file links must point at files that exist in the repo
+  (anchors are stripped; an ``#anchor`` on a missing file still fails);
+* intra-document anchors (``#section``) must match a heading slug of the
+  target document (GitHub slug rules: lowercase, punctuation dropped,
+  spaces -> dashes);
+* absolute http(s) URLs are NOT fetched — CI must not flake on someone
+  else's server — but obviously malformed ones (no host) fail.
+
+Exits non-zero listing every broken link as ``file:line: message``.
+"""
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DOCS = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading slug (enough of it for our own docs)."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set[str]:
+    out = set()
+    for line in path.read_text().splitlines():
+        m = HEADING.match(line)
+        if m:
+            out.add(slugify(m.group(1)))
+    return out
+
+
+def main() -> int:
+    errors = []
+    for doc in DOCS:
+        if not doc.exists():
+            errors.append(f"{doc.relative_to(ROOT)}: document missing")
+            continue
+        for lineno, line in enumerate(doc.read_text().splitlines(), 1):
+            for m in LINK.finditer(line):
+                target = m.group(1)
+                where = f"{doc.relative_to(ROOT)}:{lineno}"
+                if target.startswith(("http://", "https://")):
+                    if not re.match(r"https?://[\w.-]+", target):
+                        errors.append(f"{where}: malformed URL {target!r}")
+                    continue
+                if target.startswith("mailto:"):
+                    continue
+                path_part, _, anchor = target.partition("#")
+                dest = (doc.parent / path_part).resolve() if path_part \
+                    else doc
+                if path_part and not dest.exists():
+                    errors.append(f"{where}: broken link {target!r} "
+                                  f"(no such file {path_part!r})")
+                    continue
+                if anchor and dest.suffix == ".md":
+                    if anchor not in anchors_of(dest):
+                        errors.append(f"{where}: broken anchor "
+                                      f"{target!r} (no heading "
+                                      f"'#{anchor}' in {dest.name})")
+    for e in errors:
+        print(e)
+    n_links = sum(len(LINK.findall(d.read_text()))
+                  for d in DOCS if d.exists())
+    print(f"checked {n_links} links across {len(DOCS)} documents: "
+          f"{len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -641,19 +641,38 @@ class BiasModel:
 
     State is three (T, N) float64 host arrays (counts, sum log r,
     sum (log r)^2) — sufficient statistics, so updates are O(batch) numpy
-    scatters and the whole object serialises to JSON losslessly.  The
-    second moment is not consumed by ``posterior()`` (``sigma_r`` is
-    fixed today) but is persisted so the empirical-Bayes noise estimate
-    (see ``residual_spread`` and the ROADMAP open item) can be fitted
-    over histories recorded before it lands, without a schema bump.  Row
+    scatters and the whole object serialises to JSON losslessly.  Row
     order follows the estimator's ``task_names()``; column order is the
     estimator's fixed node universe.
+
+    Two online refinements, both inert at their defaults:
+
+    * ``decay`` — exponential forgetting on the sufficient statistics:
+      every ``update`` batch first multiplies (counts, log_sum, log_sq)
+      by ``decay``, so older residuals carry weight ``decay^age`` and the
+      posterior tracks slow hardware drift (thermal throttling, creeping
+      contention) instead of averaging it away.  ``decay=1.0`` (default)
+      is bit-exact with the decay-free model: the multiply is skipped
+      entirely, not merely a multiply-by-one.
+    * ``empirical_bayes`` — pool the residual noise scale from the data:
+      ``effective_sigma_r()`` replaces the fixed ``sigma_r`` with the
+      pooled within-pair spread of the observed log-residuals
+      (``residual_spread``), so shrinkage weights match the cluster's
+      actual noise level rather than a guessed 0.25.  Until any pair has
+      two observations the configured ``sigma_r`` is used unchanged.
     """
 
-    __slots__ = ("counts", "log_sum", "log_sq", "tau0", "sigma_r")
+    __slots__ = ("counts", "log_sum", "log_sq", "tau0", "sigma_r",
+                 "decay", "empirical_bayes", "_sigma_r_cache")
+
+    #: floor for the empirical-Bayes pooled noise scale — a cluster whose
+    #: observed residuals are (near-)deterministic would otherwise drive
+    #: sigma_r -> 0 and make a single residual look infinitely informative
+    SIGMA_R_FLOOR = 0.02
 
     def __init__(self, n_tasks: int, n_nodes: int, *, tau0: float = 0.5,
-                 sigma_r: float = 0.25, counts=None, log_sum=None,
+                 sigma_r: float = 0.25, decay: float = 1.0,
+                 empirical_bayes: bool = False, counts=None, log_sum=None,
                  log_sq=None):
         shape = (n_tasks, n_nodes)
         self.counts = (np.zeros(shape) if counts is None
@@ -664,25 +683,60 @@ class BiasModel:
                        else np.asarray(log_sq, np.float64).reshape(shape))
         self.tau0 = float(tau0)
         self.sigma_r = float(sigma_r)
+        if not 0.0 < decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {decay}")
+        self.decay = float(decay)
+        self.empirical_bayes = bool(empirical_bayes)
+        self._sigma_r_cache: float | None = None
 
     @property
     def shape(self) -> tuple[int, int]:
         return self.counts.shape
 
+    def effective_sigma_r(self) -> float:
+        """The residual noise scale the posterior actually uses: the fixed
+        ``sigma_r``, or — with ``empirical_bayes`` — the pooled empirical
+        spread of the observed log-residuals (floored at
+        ``SIGMA_R_FLOOR``), falling back to the fixed value while no pair
+        has two observations yet.
+
+        Memoised between updates: scalar consumers (``point`` /
+        ``tail_mass`` / ``interval_scale``) may be called per running
+        task per executor tick, and the pooled spread is an O(T·N)
+        reduction — ``update`` invalidates the cache."""
+        if not self.empirical_bayes:
+            return self.sigma_r
+        if self._sigma_r_cache is None:
+            s = self.residual_spread()
+            self._sigma_r_cache = (self.sigma_r if not np.isfinite(s)
+                                   else max(s, self.SIGMA_R_FLOOR))
+        return self._sigma_r_cache
+
     def update(self, rows, cols, log_resid) -> None:
         """Absorb a batch of log-residuals at (rows[k], cols[k]) — repeated
-        pairs accumulate (``np.add.at`` scatter)."""
+        pairs accumulate (``np.add.at`` scatter).
+
+        With ``decay < 1`` the whole sufficient-statistic state is decayed
+        once per call, *before* the batch is absorbed — one ``update`` is
+        one forgetting step, so callers batching a simulation tick decay
+        per tick, not per observation."""
         rows = np.asarray(rows, np.int64)
         cols = np.asarray(cols, np.int64)
         lr = np.asarray(log_resid, np.float64)
+        if self.decay != 1.0:
+            self.counts *= self.decay
+            self.log_sum *= self.decay
+            self.log_sq *= self.decay
         np.add.at(self.counts, (rows, cols), 1.0)
         np.add.at(self.log_sum, (rows, cols), lr)
         np.add.at(self.log_sq, (rows, cols), lr * lr)
+        self._sigma_r_cache = None
 
     def posterior(self) -> tuple[np.ndarray, np.ndarray]:
         """(mu, v): posterior mean and variance of the log-bias, (T, N)."""
-        lam = 1.0 / self.tau0 ** 2 + self.counts / self.sigma_r ** 2
-        mu = self.log_sum / (self.sigma_r ** 2 * lam)
+        sr = self.effective_sigma_r()
+        lam = 1.0 / self.tau0 ** 2 + self.counts / sr ** 2
+        mu = self.log_sum / (sr ** 2 * lam)
         return mu, 1.0 / lam
 
     def matrix(self, cols=None) -> np.ndarray:
@@ -713,8 +767,9 @@ class BiasModel:
     def _pair(self, i: int, j: int) -> tuple[float, float, float]:
         """(n, mu, v) of one (task, node) pair without building matrices."""
         n = float(self.counts[i, j])
-        lam = 1.0 / self.tau0 ** 2 + n / self.sigma_r ** 2
-        mu = float(self.log_sum[i, j]) / (self.sigma_r ** 2 * lam)
+        sr = self.effective_sigma_r()
+        lam = 1.0 / self.tau0 ** 2 + n / sr ** 2
+        mu = float(self.log_sum[i, j]) / (sr ** 2 * lam)
         return n, mu, 1.0 / lam
 
     def point(self, i: int, j: int) -> float:
@@ -744,12 +799,35 @@ class BiasModel:
         sd = float(np.sqrt(v))
         return float(np.exp(mu - z * sd)), float(np.exp(mu + z * sd))
 
+    def tail_mass(self, i: int, j: int, threshold: float) -> float:
+        """Posterior probability that the pair's multiplicative bias
+        exceeds ``threshold``: ``P(exp(beta) > threshold)`` under the
+        Normal posterior on the log-bias.
+
+        This is the admission statistic for risk-aware speculation: the
+        point estimate ``exp(mu)`` crosses a threshold the moment ``mu``
+        does (tail mass 0.5), while requiring more tail mass demands the
+        whole posterior — not just its centre — to sit above the drift
+        line, so a single noisy residual cannot trigger a copy.  Returns
+        0.0 for unobserved pairs (no evidence of drift); an observed
+        pair's bias ``exp(beta)`` is almost-surely positive, so any
+        ``threshold <= 0`` yields the full mass 1.0 (matching the
+        point-estimate comparison at the same threshold)."""
+        n, mu, v = self._pair(i, j)
+        if n <= 0:
+            return 0.0
+        if threshold <= 0.0:
+            return 1.0
+        z = (np.log(threshold) - mu) / np.sqrt(v)
+        return float(_scipy_stats.norm.sf(z))
+
     def residual_spread(self) -> float:
         """Pooled empirical sd of the log-residuals around their per-pair
-        means — the data-driven counterpart of ``sigma_r``.  Diagnostic:
-        a spread far from the configured ``sigma_r`` means the shrinkage
-        weights are mis-calibrated for this cluster.  NaN until some pair
-        has at least two observations."""
+        means — the data-driven counterpart of ``sigma_r``, and the
+        quantity ``effective_sigma_r`` substitutes for it under
+        ``empirical_bayes``.  A spread far from the configured ``sigma_r``
+        means the shrinkage weights are mis-calibrated for this cluster.
+        NaN until some pair has at least two observations."""
         n = self.counts
         mask = n >= 2
         if not mask.any():
@@ -772,6 +850,8 @@ class BiasModel:
 
     def to_dict(self) -> dict:
         return {"tau0": self.tau0, "sigma_r": self.sigma_r,
+                "decay": self.decay,
+                "empirical_bayes": self.empirical_bayes,
                 "counts": self.counts.tolist(),
                 "log_sum": self.log_sum.tolist(),
                 "log_sq": self.log_sq.tolist()}
@@ -779,9 +859,12 @@ class BiasModel:
     @classmethod
     def from_dict(cls, d: dict) -> "BiasModel":
         counts = np.asarray(d["counts"], np.float64)
+        # decay / empirical_bayes landed in schema v4; v3 files predate
+        # them and get the (bit-exact) inert defaults
         return cls(counts.shape[0], counts.shape[1], tau0=d["tau0"],
-                   sigma_r=d["sigma_r"], counts=counts,
-                   log_sum=d["log_sum"], log_sq=d["log_sq"])
+                   sigma_r=d["sigma_r"], decay=d.get("decay", 1.0),
+                   empirical_bayes=d.get("empirical_bayes", False),
+                   counts=counts, log_sum=d["log_sum"], log_sq=d["log_sq"])
 
 
 def update_task_batch_stream(model: BatchedTaskModel, task_idx, x, y, *,
@@ -794,6 +877,10 @@ def update_task_batch_stream(model: BatchedTaskModel, task_idx, x, y, *,
     ``task_idx`` (S,) int, ``x`` / ``y`` (S,) — the medians are replayed
     host-side (the log is untraced), then one ``lax.scan`` absorbs the
     stream, so throughput is not bounded by Python dispatch.
+
+    Like ``update_task_batch``, the input model is CONSUMED: its
+    ``SampleLog`` is shared with the returned model and mutated in
+    place.  Keep only the returned model (see docs/api.md).
     """
     _require_stats(model)
     task_idx = np.asarray(task_idx, np.int64)

@@ -33,22 +33,32 @@ from .blr import (BatchedTaskModel, BiasModel, TaskModel, fit_task,
 from .downsample import partition_sizes
 from .profiler import BenchResult
 
-SCHEMA_VERSION = 3   # LotaruEstimator.save/load on-disk format
+SCHEMA_VERSION = 4   # LotaruEstimator.save/load on-disk format
+# v1: raw samples only (refit on load)     v2: + fitted posteriors
+# v3: + per-(task, node) bias state        v4: + bias hyperparameters
+#                                               (decay, empirical_bayes)
+# Every version still loads; see docs/architecture.md for the field map.
 
 
 def _fold_bias_matrix(bias: BiasModel, bias_col: dict[str, int],
-                      nodes: list[str], mean: np.ndarray, std: np.ndarray):
+                      nodes: list[str], mean: np.ndarray, std: np.ndarray,
+                      with_std: bool = True):
     """Fold a learned (row × node) bias into a bias-free estimate matrix:
     mean scaled by the posterior point estimate, std widened by the
     posterior uncertainty.  Unobserved pairs and nodes outside the bias
     universe pass through untouched (bitwise), so dirty-row caches stay
-    valid."""
+    valid.  ``with_std=False`` skips the (comparatively costly) widening
+    and returns ``(mean, None)`` for mean-only consumers."""
     known = [k for k, n in enumerate(nodes) if n in bias_col]
     if not known:
-        return mean.copy(), std.copy()
+        return mean.copy(), (std.copy() if with_std else None)
     cols = [bias_col[nodes[k]] for k in known]
-    out_mean, out_std = mean.copy(), std.copy()
-    out_std[:, known] = bias.widen_std(mean[:, known], std[:, known], cols)
+    out_mean = mean.copy()
+    out_std = None
+    if with_std:
+        out_std = std.copy()
+        out_std[:, known] = bias.widen_std(mean[:, known], std[:, known],
+                                           cols)
     out_mean[:, known] = mean[:, known] * bias.matrix(cols)
     return out_mean, out_std
 
@@ -70,9 +80,16 @@ class _BiasLayer:
     creation, matrix/scalar folding, row lookup — lives here once, so the
     two planes cannot drift apart."""
 
-    def _bias_setup(self, bias_correction: bool) -> None:
+    def _bias_setup(self, bias_correction: bool, *, decay: float = 1.0,
+                    sigma_r: float = 0.25,
+                    empirical_bayes: bool = False) -> None:
+        """``decay`` / ``sigma_r`` / ``empirical_bayes`` are forwarded to
+        the lazily-created ``BiasModel`` (see its docstring); the defaults
+        are bit-exact with the hyperparameter-free layer."""
         self.bias_correction = bias_correction
         self.bias: BiasModel | None = None
+        self._bias_opts = {"decay": float(decay), "sigma_r": float(sigma_r),
+                           "empirical_bayes": bool(empirical_bayes)}
         self.bias_nodes = ([self.local_bench.node]
                            + list(self.target_benches))
         self._bias_col = {n: j for j, n in enumerate(self.bias_nodes)}
@@ -101,17 +118,17 @@ class _BiasLayer:
                                + list(self.target_benches))
             self._bias_col = {n: j for j, n in enumerate(self.bias_nodes)}
             self.bias = BiasModel(len(self._bias_rows()),
-                                  len(self.bias_nodes))
+                                  len(self.bias_nodes), **self._bias_opts)
         else:
             self.bias.expand_rows(len(self._bias_rows()))
         return self.bias
 
     def _bias_fold(self, nodes: list[str], mean: np.ndarray,
-                   std: np.ndarray):
+                   std: np.ndarray, with_std: bool = True):
         if not self.bias_correction:
-            return mean.copy(), std.copy()
+            return mean.copy(), (std.copy() if with_std else None)
         return _fold_bias_matrix(self._ensure_bias(), self._bias_col,
-                                 nodes, mean, std)
+                                 nodes, mean, std, with_std)
 
     def _bias_fold_scalar(self, name: str, node: str, mean: float,
                           std: float) -> tuple[float, float]:
@@ -134,6 +151,24 @@ class _BiasLayer:
         if j is None:
             return 1.0
         return self.bias.point(self._row_of(name), j)
+
+    def bias_tail_mass(self, name: str, node: str,
+                       threshold: float) -> float:
+        """Posterior probability that the (task/cell, node) bias exceeds
+        ``threshold`` — the admission statistic for risk-aware
+        speculative copies (``OnlineExecutor(spec_tail=...)``).  Unlike
+        ``bias_point`` (a point estimate that crosses a threshold the
+        moment the posterior mean does), this demands the posterior
+        *mass* to sit above the drift line, so barely-observed pairs
+        with wide posteriors do not trigger copies.  Returns 0.0 when
+        the pair is unobserved, the node is outside the bias universe,
+        or bias correction is off."""
+        if not self.bias_correction or self.bias is None:
+            return 0.0
+        j = self._bias_col.get(node)
+        if j is None:
+            return 0.0
+        return self.bias.tail_mass(self._row_of(name), j, threshold)
 
 
 @jax.jit
@@ -203,7 +238,9 @@ class LotaruEstimator(_BiasLayer):
 
     def __init__(self, local_bench: BenchResult,
                  target_benches: dict[str, BenchResult],
-                 freq_reduction: float = 0.2, bias_correction: bool = True):
+                 freq_reduction: float = 0.2, bias_correction: bool = True,
+                 bias_decay: float = 1.0, bias_sigma_r: float = 0.25,
+                 bias_empirical_bayes: bool = False):
         self.local_bench = local_bench
         self.target_benches = target_benches
         self.freq_reduction = freq_reduction
@@ -213,8 +250,13 @@ class LotaruEstimator(_BiasLayer):
         self._dirty_rows: set[int] = set()     # rows invalidated by observe()
         # online heterogeneity correction: per-(task, node) multiplicative
         # bias posterior fed by observe(); bias_correction=False keeps the
-        # pure factor-scaled path (the paper-faithful / PR-2 ablation)
-        self._bias_setup(bias_correction)
+        # pure factor-scaled path (the paper-faithful / PR-2 ablation).
+        # bias_decay < 1 forgets old residuals exponentially (hardware
+        # drift); bias_empirical_bayes pools sigma_r from the observed
+        # residual spread.  The defaults are bit-exact with PR 3.
+        self._bias_setup(bias_correction, decay=bias_decay,
+                         sigma_r=bias_sigma_r,
+                         empirical_bayes=bias_empirical_bayes)
 
     def _bias_rows(self) -> dict:
         return self.tasks
@@ -321,13 +363,19 @@ class LotaruEstimator(_BiasLayer):
                     k += 1
         return F
 
-    def predict_matrix(self, nodes: list[str], size):
+    def predict_matrix(self, nodes: list[str], size, with_std: bool = True):
         """Full (task × node) estimate matrix in one jitted call.
 
         ``size`` is a scalar (shared input size) or a (T,) per-task array.
         Returns (mean, std) arrays of shape (T, N): rows follow
         ``task_names()``, columns follow ``nodes`` (the local node gets
-        factor 1, matching ``predict_local``).
+        factor 1, matching ``predict_local``).  With ``with_std=False``
+        the std slot is ``None`` and the bias widening is skipped — for
+        mean-only consumers (e.g. a risk-neutral HEFT rank) that don't
+        want to pay for the delta-method fold.  ``with_std=True`` is the
+        risk-aware path: the returned std already carries the bias
+        posterior's own uncertainty, which is exactly the sigma a
+        ``risk_k``-weighted scheduler should consume.
 
         The matrix is cached per (nodes, size); ``observe`` invalidates
         only the observed task's row, so an online re-predict recomputes
@@ -350,7 +398,7 @@ class LotaruEstimator(_BiasLayer):
                 c["mean"][idx] = np.asarray(mean_r, np.float64)
                 c["std"][idx] = np.asarray(std_r, np.float64)
                 self._dirty_rows.clear()
-            return self._bias_fold(nodes, c["mean"], c["std"])
+            return self._bias_fold(nodes, c["mean"], c["std"], with_std)
         F = self.factor_matrix(nodes)
         mean, std = _scaled_matrix_core(model, jnp.asarray(F, dt),
                                         jnp.asarray(size, dt))
@@ -361,7 +409,7 @@ class LotaruEstimator(_BiasLayer):
                            "std": np.array(std, np.float64)}
         self._dirty_rows.clear()
         return self._bias_fold(nodes, self._mat_cache["mean"],
-                               self._mat_cache["std"])
+                               self._mat_cache["std"], with_std)
 
     # ---- phase 5 (beyond paper): online estimation ------------------------
     def observe(self, task_name: str, node: str, size: float,
@@ -434,15 +482,22 @@ class LotaruEstimator(_BiasLayer):
             # from this tick (the task-common part), so what is left is
             # the pair-specific residual — charging the PRE-update means
             # instead would double-count the model's own transient misfit
-            # into whichever pair happened to report first
+            # into whichever pair happened to report first.  The whole
+            # tick goes through ONE BiasModel.update scatter: one update
+            # is one forgetting step, so the decay clock ticks per
+            # simulation tick, not per completion within it
+            rows, cols, lrs = [], [], []
             for k, (task, node, size, runtime) in enumerate(obs):
                 if node not in self._bias_col:
                     continue
                 m_post, _ = self.tasks[task].model.predict(size)
                 scaled = factors[k] * float(m_post)
                 if runtime > 0.0 and scaled > 1e-12:
-                    bias.update([int(idx[k])], [self._bias_col[node]],
-                                [np.log(runtime / scaled)])
+                    rows.append(int(idx[k]))
+                    cols.append(self._bias_col[node])
+                    lrs.append(np.log(runtime / scaled))
+            if rows:
+                bias.update(rows, cols, lrs)
         c = self._batch_cache
         self._batch_cache = (c[0], c[1], new_model, c[3])
         if self._mat_cache is not None and self._mat_cache["model"] is model:
@@ -484,15 +539,19 @@ class LotaruEstimator(_BiasLayer):
     # ---- offline reuse (paper §1: "allows for offline scenarios where the
     # learned models are reused for future executions") -----------------
     def save(self, path) -> None:
-        """Schema v3: persists the fitted posteriors themselves (v2), plus
-        the online per-(task, node) bias state, so a save → load round
-        trip reproduces predictions bit-exactly — including everything
-        learned from streamed observations."""
+        """Schema v4: persists the fitted posteriors themselves (v2), the
+        online per-(task, node) bias state (v3), and the bias
+        hyperparameters — forgetting factor ``decay`` and the
+        ``empirical_bayes`` noise pooling (v4) — so a save → load round
+        trip reproduces predictions bit-exactly, including everything
+        learned from streamed observations.  Earlier files still load:
+        missing v4 fields default to the inert (bit-exact) values."""
         import json
         from pathlib import Path
         out = {"version": SCHEMA_VERSION,
                "freq_reduction": self.freq_reduction,
                "bias_correction": self.bias_correction,
+               "bias_opts": dict(self._bias_opts),
                "bias": None if self.bias is None else {
                    "nodes": list(self.bias_nodes),
                    "state": self.bias.to_dict()},
@@ -529,9 +588,13 @@ class LotaruEstimator(_BiasLayer):
         version = d.get("version", 1)
         local = BenchResult(**d["local_bench"])
         targets = {k: BenchResult(**v) for k, v in d["target_benches"].items()}
+        opts = d.get("bias_opts", {})       # v4; absent in v1-v3 files
         est = cls(local, targets,
                   freq_reduction=d.get("freq_reduction", 0.2),
-                  bias_correction=d.get("bias_correction", True))
+                  bias_correction=d.get("bias_correction", True),
+                  bias_decay=opts.get("decay", 1.0),
+                  bias_sigma_r=opts.get("sigma_r", 0.25),
+                  bias_empirical_bayes=opts.get("empirical_bayes", False))
         if version >= 3 and d.get("bias") is not None:
             est.bias_nodes = list(d["bias"]["nodes"])
             est._bias_col = {n: j for j, n in enumerate(est.bias_nodes)}
@@ -593,7 +656,9 @@ class LotaruML(_BiasLayer):
 
     def __init__(self, local_bench: BenchResult,
                  target_benches: dict[str, BenchResult],
-                 bias_correction: bool = True):
+                 bias_correction: bool = True, bias_decay: float = 1.0,
+                 bias_sigma_r: float = 0.25,
+                 bias_empirical_bayes: bool = False):
         self.local_bench = local_bench
         self.target_benches = target_benches
         self.cells: dict[str, FittedCell] = {}
@@ -603,7 +668,10 @@ class LotaruML(_BiasLayer):
         # same online heterogeneity correction as LotaruEstimator: the
         # decomposed transfer linearises real cells imperfectly, and the
         # per-(cell, node) residual of that transfer is itself systematic
-        self._bias_setup(bias_correction)
+        # (decay / empirical-Bayes knobs as in LotaruEstimator)
+        self._bias_setup(bias_correction, decay=bias_decay,
+                         sigma_r=bias_sigma_r,
+                         empirical_bayes=bias_empirical_bayes)
 
     def _bias_rows(self) -> dict:
         return self.cells
@@ -785,15 +853,18 @@ class LotaruML(_BiasLayer):
         # np.array (not asarray): the row cache patches these in place
         return np.array(mean, np.float64), np.array(std, np.float64)
 
-    def predict_matrix(self, nodes: list[str], tokens=None):
+    def predict_matrix(self, nodes: list[str], tokens=None,
+                       with_std: bool = True):
         """Full (cell × node) decomposed estimate matrix, one jitted call.
 
         ``tokens``: None (each cell's full step tokens), a scalar, or a
         (T,) per-cell array.  Returns (mean, std) of shape (T, N); rows in
-        ``cell_names()`` order, columns in ``nodes`` order.  Cached per
-        (nodes, tokens) bias-free; the bias fold happens on the way out
-        (see ``LotaruEstimator.predict_matrix``); ``observe`` dirties only
-        the affected row."""
+        ``cell_names()`` order, columns in ``nodes`` order; with
+        ``with_std=False`` the std slot is ``None`` and the bias widening
+        is skipped (mean-only fast path — see
+        ``LotaruEstimator.predict_matrix``).  Cached per (nodes, tokens)
+        bias-free; the bias fold happens on the way out; ``observe``
+        dirties only the affected row."""
         _, model, arr = self._batched()
         toks = arr["full_tokens"] if tokens is None else np.broadcast_to(
             np.asarray(tokens, np.float64), arr["full_tokens"].shape)
@@ -808,12 +879,12 @@ class LotaruML(_BiasLayer):
                 c["mean"][idx] = mean_r
                 c["std"][idx] = std_r
                 self._dirty_rows.clear()
-            return self._bias_fold(nodes, c["mean"], c["std"])
+            return self._bias_fold(nodes, c["mean"], c["std"], with_std)
         mean, std = self._matrix_rows(model, arr, toks, nodes)
         self._mat_cache = {"key": key, "model": model,
                            "mean": mean, "std": std}
         self._dirty_rows.clear()
-        return self._bias_fold(nodes, mean, std)
+        return self._bias_fold(nodes, mean, std, with_std)
 
     def observe(self, cell_name: str, node: str, tokens: float,
                 runtime: float) -> float:
@@ -879,14 +950,19 @@ class LotaruML(_BiasLayer):
             # bias residuals against the POST-update implied predictions —
             # same invariant as LotaruEstimator.observe_batch: the pair
             # term only absorbs what the refreshed cell model still
-            # cannot explain
+            # cannot explain.  One BiasModel.update per tick so the
+            # forgetting factor decays per tick, not per completion
+            rows, cols, lrs = [], [], []
             for k, (cell_name, node, tokens, runtime) in enumerate(obs):
                 if node not in self._bias_col:
                     continue
                 m_post, _ = self._predict_base(cell_name, node, tokens)
                 if runtime > 0.0 and float(m_post) > 1e-12:
-                    bias.update([int(idx[k])], [self._bias_col[node]],
-                                [np.log(runtime / float(m_post))])
+                    rows.append(int(idx[k]))
+                    cols.append(self._bias_col[node])
+                    lrs.append(np.log(runtime / float(m_post)))
+            if rows:
+                bias.update(rows, cols, lrs)
         c = self._batch_cache
         self._batch_cache = (c[0], c[1], new_model, c[3])
         if self._mat_cache is not None and self._mat_cache["model"] is model:

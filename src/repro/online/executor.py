@@ -12,6 +12,13 @@ running work is never disturbed.
 
 The same loop with ``online=False`` executes the static plan with frozen
 predictions, which is the baseline every benchmark compares against.
+
+Risk-aware mode (``risk_k > 0``) closes the paper's last open loop: the
+"robust uncertainty estimates" its Bayesian predictor produces actually
+*drive placement*.  Every plan and re-plan schedules on the effective
+cost ``mean + risk_k * sigma`` where sigma is the bias-widened predictive
+std, and speculative-copy admission can be gated on the bias posterior's
+tail mass (``spec_tail``) instead of its point estimate.
 """
 from __future__ import annotations
 
@@ -85,7 +92,15 @@ class OnlineExecutor:
     runtime_fn : (task_id, node_name) → float — ground-truth runtime
     online : False freezes the initial predictions (static baseline)
     confidence : predictive-interval mass for the surprise gate
-    risk_k : uncertainty-aware HEFT knob (effective cost = mean + k·sigma)
+    risk_k : uncertainty-aware HEFT knob — every (re-)plan schedules on
+        the effective cost ``mean + risk_k·sigma``, where sigma is the
+        estimator's *bias-widened* predictive std (``predict_matrix``
+        with ``with_std=True``), end to end: the upward rank, the EFT
+        placement, and the speculative alternate-node pick all consume
+        it.  Because ``observe`` feeds the bias posterior, every
+        re-plan after a surprise prices placements by the *current*
+        posterior widths — pairs whose bias is still unsettled look
+        expensive until evidence narrows them.
     replan_cooldown : minimum completions between two re-plans
     speculate : couple the bias posterior to straggler mitigation — a
         still-running task that has outrun its dispatch-time envelope
@@ -94,9 +109,17 @@ class OnlineExecutor:
         best idle node; whichever attempt finishes first wins, the loser
         is killed and its node freed at that moment
     spec_k : envelope multiplier for the overdue check
-    bias_drift : bias point-estimate threshold that marks a node as
-        systematically slow for the task (requires an estimator with a
-        ``bias_point`` method; pairs report 1.0 until observed)
+    bias_drift : bias drift threshold that marks a node as systematically
+        slow for the task (pairs look undrifted until observed)
+    spec_tail : admission statistic for the drift check.  ``None``
+        (default) compares the bias *point estimate* against
+        ``bias_drift`` (the PR 3 behaviour, needs ``bias_point``); a
+        float in (0, 1) instead requires the bias posterior's tail mass
+        ``P(bias > bias_drift)`` to reach it (needs ``bias_tail_mass``).
+        Values above 0.5 are strictly more conservative than the point
+        estimate — a single noisy residual can move the posterior mean
+        across the drift line, but not drag most of its mass across —
+        so tail-mass admission launches fewer, better-justified copies.
     """
 
     def __init__(self, estimator, tasks: dict[str, SchedTask],
@@ -104,7 +127,10 @@ class OnlineExecutor:
                  runtime_fn, *, online: bool = True,
                  confidence: float = 0.9, risk_k: float = 0.0,
                  replan_cooldown: int = 0, speculate: bool = True,
-                 spec_k: float = 2.0, bias_drift: float = 1.15):
+                 spec_k: float = 2.0, bias_drift: float = 1.15,
+                 spec_tail: float | None = None):
+        if spec_tail is not None and not 0.0 < spec_tail < 1.0:
+            raise ValueError(f"spec_tail must be in (0, 1), got {spec_tail}")
         self.est = estimator
         self.tasks = tasks
         self.task_name = task_name
@@ -118,6 +144,7 @@ class OnlineExecutor:
         self.speculate = speculate
         self.spec_k = spec_k
         self.bias_drift = bias_drift
+        self.spec_tail = spec_tail
         self.node_names = grid.names()
         # stable node-type column order for the estimate matrix
         seen: dict[str, None] = {}
@@ -133,10 +160,13 @@ class OnlineExecutor:
             self._row[tid] = task_rows[nm]
 
     # ---- planning ---------------------------------------------------------
-    def _estimates(self):
+    def _estimates(self, with_std: bool = True):
         """Current (abstract-task × node-type) mean/std matrices.  After an
-        ``observe`` only the dirty row is recomputed (matrix row cache)."""
-        return self.est.predict_matrix(self.type_names, self.size)
+        ``observe`` only the dirty row is recomputed (matrix row cache).
+        ``with_std=False`` returns ``(mean, None)`` and skips the bias
+        widening — the mean-only fast path a risk-neutral plan takes."""
+        return self.est.predict_matrix(self.type_names, self.size,
+                                       with_std=with_std)
 
     def _plan(self, unstarted: list[str], t_now: float,
               ext_finish: dict[str, float]) -> dict[str, list[str]]:
@@ -148,7 +178,9 @@ class OnlineExecutor:
         never assumes a busy node or an unfinished input."""
         if not unstarted:
             return {n: [] for n in self.node_names}
-        mean, std = self._estimates()
+        # risk-neutral plans consume only the means: skip the bias-widened
+        # std entirely (with_std=False) instead of computing and dropping it
+        mean, std = self._estimates(with_std=self.risk_k > 0)
         idx = {tid: i for i, tid in enumerate(unstarted)}
         succ = [[idx[s] for s in self.tasks[tid].succ if s in idx]
                 for tid in unstarted]
@@ -227,9 +259,18 @@ class OnlineExecutor:
             pair that has outrun its dispatch-time envelope gets a copy on
             the best idle node, instead of only re-planning work that has
             not started yet.  First finish wins; the loser is killed and
-            its node freed at that moment."""
+            its node freed at that moment.
+
+            Admission: the point-estimate drift check by default, or —
+            when ``spec_tail`` is set — the posterior tail mass
+            ``P(bias > bias_drift) >= spec_tail``, which no single noisy
+            residual can satisfy."""
             bias_point = getattr(self.est, "bias_point", None)
-            if bias_point is None:
+            tail_mass = getattr(self.est, "bias_tail_mass", None)
+            if self.spec_tail is not None:
+                if tail_mass is None:
+                    return
+            elif bias_point is None:
                 return
             nonlocal seq
             for tid, attempts in list(running.items()):
@@ -240,15 +281,24 @@ class OnlineExecutor:
                     rec.pred_std, 1e-9)
                 if t_now < rec.start + envelope:
                     continue                      # not overdue yet
-                if bias_point(rec.name, rec.node_type) < self.bias_drift:
+                if self.spec_tail is not None:
+                    if tail_mass(rec.name, rec.node_type,
+                                 self.bias_drift) < self.spec_tail:
+                        continue    # posterior mass not behind the drift
+                elif bias_point(rec.name, rec.node_type) < self.bias_drift:
                     continue                      # node not drifted for it
                 node = attempts[0][0]
                 idle = [n for n in self.grid.idle(t_now) if n != node]
                 if not idle:
                     continue
                 r = self._row[tid]
+                # the copy's landing spot is priced with the same risk
+                # aversion as the plan: a low-mean but still-uncertain
+                # node is a bad place to park a rescue attempt
                 alt = min(idle, key=lambda n: mean[
-                    r, self._type_idx[self.grid.type_of(n).name]])
+                    r, self._type_idx[self.grid.type_of(n).name]]
+                    + self.risk_k * std[
+                        r, self._type_idx[self.grid.type_of(n).name]])
                 dur = float(self.runtime_fn(tid, alt))
                 end = t_now + dur
                 self.grid.occupy(alt, end)

@@ -13,6 +13,7 @@ for every (task, node) pair, which Lotaru supplies online.  We implement:
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -86,19 +87,24 @@ def heft_schedule_array(succ: list[list[int]], pred: list[list[int]],
 
     ``succ`` / ``pred`` are index-based adjacency lists; ``cost[t, n]`` the
     estimated runtime of task t on node n (``uncertainty`` likewise, used
-    when risk_k > 0: effective cost = mean + risk_k * sigma).  The EFT
-    inner loop is vectorised over the node axis.  ``node_ready`` (N,) /
-    ``task_ready`` (T,) are earliest-availability floors for mid-execution
-    re-planning: node j is busy until node_ready[j], task t's external
-    predecessors (already done or running) finish at task_ready[t].
-    Returns index-based arrays: {assignment (T,) int, start (T,),
-    finish (T,), makespan, order (T,) int}."""
+    when risk_k > 0: effective cost = mean + risk_k * sigma).  The
+    effective cost drives the schedule END TO END — both the upward rank
+    (task priority) and the EFT placement inner loop — so under
+    ``risk_k > 0`` uncertain tasks are ranked more urgent (their risk
+    inflates every successor chain through them) *and* uncertain
+    placements are penalised.  The EFT inner loop is vectorised over the
+    node axis.  ``node_ready`` (N,) / ``task_ready`` (T,) are
+    earliest-availability floors for mid-execution re-planning: node j is
+    busy until node_ready[j], task t's external predecessors (already
+    done or running) finish at task_ready[t].  Returns index-based
+    arrays: {assignment (T,) int, start (T,), finish (T,), makespan,
+    order (T,) int}."""
     cost = np.asarray(cost, np.float64)
     T, N = cost.shape
     eff = cost
     if uncertainty is not None and risk_k > 0:
         eff = cost + risk_k * np.asarray(uncertainty, np.float64)
-    rank = upward_rank_array(succ, pred, cost.mean(axis=1))
+    rank = upward_rank_array(succ, pred, eff.mean(axis=1))
     order = np.argsort(-rank, kind="stable")
     node_free = (np.zeros(N) if node_ready is None
                  else np.asarray(node_ready, np.float64).copy())
@@ -131,9 +137,22 @@ def heft_schedule(tasks: dict[str, SchedTask],
     """cost[task][node] = estimated runtime; uncertainty likewise (sigma).
 
     risk_k > 0 gives the uncertainty-aware variant: effective cost =
-    mean + risk_k * sigma.  Returns {assignment, start, finish, makespan,
-    order}.  Thin dict wrapper over ``heft_schedule_array``."""
+    mean + risk_k * sigma, applied to both the upward rank and the EFT
+    placement.  Returns {assignment, start, finish, makespan, order}.
+    Thin dict wrapper over ``heft_schedule_array``.
+
+    Contract: ``uncertainty`` participates ONLY when ``risk_k > 0``.
+    With ``risk_k == 0`` the dict is never indexed (so it may be sparse
+    or partial) and the schedule is identical to not passing it at all —
+    a ``UserWarning`` flags the combination, since silently dropping a
+    supplied sigma surprised real callers."""
     ids = list(tasks)
+    if uncertainty is not None and risk_k == 0:
+        warnings.warn(
+            "heft_schedule: uncertainty was provided but risk_k == 0, so "
+            "it is ignored — pass risk_k > 0 for uncertainty-aware "
+            "ranking/placement (effective cost = mean + risk_k * sigma)",
+            UserWarning, stacklevel=2)
     if not ids:
         return {"assignment": {}, "start": {}, "finish": {},
                 "makespan": 0.0, "order": []}
@@ -161,14 +180,20 @@ def heft_schedule_reference(tasks: dict[str, SchedTask],
                             uncertainty: dict[str, dict[str, float]] | None = None,
                             risk_k: float = 0.0) -> dict:
     """The original pure-Python dict-of-dicts HEFT, kept as the equivalence
-    oracle for tests and the baseline for benchmarks/bench_predict.py."""
+    oracle for tests and the baseline for benchmarks/bench_predict.py.
+    Like the fast path, the risk-adjusted effective cost drives both the
+    upward rank and the EFT placement."""
     def eff(tid: str, node: str) -> float:
         c = cost[tid][node]
         if uncertainty is not None and risk_k > 0:
             c = c + risk_k * uncertainty[tid][node]
         return c
 
-    rank = _upward_rank(tasks, cost)
+    if uncertainty is not None and risk_k > 0:
+        eff_cost = {t: {n: eff(t, n) for n in nodes} for t in tasks}
+    else:
+        eff_cost = cost
+    rank = _upward_rank(tasks, eff_cost)
     order = sorted(tasks, key=lambda t: -rank[t])
     node_free = {n: 0.0 for n in nodes}
     finish: dict[str, float] = {}

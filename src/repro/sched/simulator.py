@@ -32,21 +32,48 @@ class ClusterSimulator:
     (lognormal, derived from a stable hash): real tools hit different
     codepaths / cache behaviour on different machines, which is exactly why
     scalar factor adjustment has an error floor in the paper's Tables 4-6.
+
+    ``het`` makes the run-to-run noise heteroscedastic per (task, node)
+    pair: the lognormal sd becomes ``noise * (1 + het * u)`` with a
+    stable-hash ``u`` in [0, 1), so some pairs are far jitterier than
+    others — the regime where risk-aware (mean + k*sigma) placement beats
+    risk-neutral placement.  ``het=0`` (default) keeps the homoscedastic
+    behaviour bit-exactly.
     """
 
     def __init__(self, seed: int = 0, noise: float = 0.05,
-                 systematic: float = 0.10):
+                 systematic: float = 0.10, het: float = 0.0):
         self.rng = np.random.default_rng(seed)
         self.noise = noise
         self.systematic = systematic
+        self.het = het
+
+    @staticmethod
+    def _pair_rng(task_name: str, node_name: str,
+                  tag: str) -> np.random.Generator:
+        """Deterministic per-(task, node, property) generator from a
+        stable hash (crc32, not builtin ``hash`` — stable across
+        processes): hidden pair properties are fixed facts of the
+        cluster, not draws from the simulation stream."""
+        import zlib
+        h = zlib.crc32(f"{task_name}|{node_name}|{tag}".encode()) % (2 ** 31)
+        return np.random.default_rng(h)
 
     def _sys_mult(self, task_name: str, node_name: str) -> float:
         if self.systematic <= 0:
             return 1.0
-        import zlib  # stable across processes (unlike builtin hash)
-        h = zlib.crc32(f"{task_name}|{node_name}|sys".encode()) % (2 ** 31)
-        g = np.random.default_rng(h).normal(0.0, self.systematic)
+        g = self._pair_rng(task_name, node_name, "sys").normal(
+            0.0, self.systematic)
         return float(np.exp(g))
+
+    def noise_sd(self, task_name: str, node_name: str) -> float:
+        """Lognormal sd of this pair's run-to-run jitter (``noise`` unless
+        ``het > 0``; the per-pair factor comes from a stable hash, so it
+        is a fixed property of the pair, not a draw)."""
+        if self.het <= 0:
+            return self.noise
+        u = float(self._pair_rng(task_name, node_name, "het").random())
+        return self.noise * (1.0 + self.het * u)
 
     # ---- genomics plane ---------------------------------------------------
     def run_task(self, task: TaskDef, node: NodeType, size_gb: float,
@@ -58,7 +85,7 @@ class ClusterSimulator:
             * (REF_IO / node.io_bw)
         t = (cpu_t + io_t) * self._sys_mult(task.name, node.name)
         if noisy:
-            t *= self.rng.lognormal(0.0, self.noise)
+            t *= self.rng.lognormal(0.0, self.noise_sd(task.name, node.name))
         return float(t)
 
     def expected_task_runtime(self, task: TaskDef, node: NodeType,

@@ -295,9 +295,16 @@ def test_predict_matrix_cache_sees_in_place_task_replacement():
 def test_heft_sparse_uncertainty_ignored_when_risk_zero():
     tasks, cost, _, nodes = _reference_dag()
     partial_unc = {"a": {n: 1.0 for n in nodes}}   # sigma for one task only
-    s = heft_schedule(tasks, cost, nodes, uncertainty=partial_unc,
-                      risk_k=0.0)
+    # the contract: uncertainty participates only when risk_k > 0 — the
+    # sparse dict must not be indexed, and the surprising combination is
+    # flagged with a UserWarning instead of silently dropped
+    with pytest.warns(UserWarning, match="risk_k == 0"):
+        s = heft_schedule(tasks, cost, nodes, uncertainty=partial_unc,
+                          risk_k=0.0)
     assert set(s["assignment"]) == set(tasks)
+    np.testing.assert_array_equal(
+        [s["assignment"][t] for t in tasks],
+        [heft_schedule(tasks, cost, nodes)["assignment"][t] for t in tasks])
 
 
 def test_heft_schedule_array_direct_api():

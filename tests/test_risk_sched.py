@@ -1,0 +1,413 @@
+"""Risk-aware scheduling layer: forgetting-factor + empirical-Bayes bias
+hyperparameters, tail-mass speculative admission, risk-priced HEFT
+(effective cost = mean + risk_k * widened sigma, rank AND placement), and
+the bit-exactness of the inert defaults against the PR 3 behaviour."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import BiasModel, LotaruEstimator
+from repro.core.nodes import get_node
+from repro.core.profiler import BenchResult
+from repro.online import OnlineExecutor, fanout_chain_dag
+from repro.sched.heft import SchedTask, heft_schedule, heft_schedule_array
+from repro.sched.simulator import ClusterSimulator, GridEngine
+
+
+def _bench(name, cpu, io):
+    return BenchResult(node=name, cpu_events_s=cpu, matmul_gflops=100.0,
+                       mem_gbps=20.0, io_read_mbps=io, io_write_mbps=io,
+                       link_gbps=0.0)
+
+
+def _fitted(seed=0, n_tasks=5, **kw):
+    rng = np.random.default_rng(seed)
+    local = _bench("local-cpu", 450.0, 420.0)
+    benches = {f"n{j}": _bench(f"n{j}", float(rng.uniform(150, 900)),
+                               float(rng.uniform(100, 900)))
+               for j in range(3)}
+    est = LotaruEstimator(local, benches, **kw)
+    slopes = {f"t{i}": (i + 1) * 2.0 for i in range(n_tasks)}
+    est.fit_tasks(list(slopes), 64.0,
+                  lambda n, s, cf: slopes[n] * s / cf + 5.0,
+                  n_partitions=8)
+    return est
+
+
+# ---------------------------------------------------------------------------
+# Inert defaults reproduce PR 3 bit-exactly
+# ---------------------------------------------------------------------------
+def test_inert_defaults_bitexact_pr3():
+    """decay=1.0 + default sigma_r + empirical_bayes off, passed
+    explicitly, must be byte-for-byte the default construction: same bias
+    sufficient statistics, same predictions, after the same stream."""
+    est_default = _fitted(seed=11)
+    est_explicit = _fitted(seed=11, bias_decay=1.0, bias_sigma_r=0.25,
+                           bias_empirical_bayes=False)
+    nodes = list(est_default.target_benches)
+    obs = [("t0", nodes[0], 30.0, 140.0), ("t1", nodes[1], 28.0, 260.0),
+           ("t2", nodes[2], 35.0, 410.0), ("t0", nodes[1], 31.0, 150.0)]
+    for est in (est_default, est_explicit):
+        est.observe_batch(obs)
+        est.observe("t3", nodes[0], 26.0, 333.0)
+    assert np.array_equal(est_default.bias.counts, est_explicit.bias.counts)
+    assert np.array_equal(est_default.bias.log_sum,
+                          est_explicit.bias.log_sum)
+    assert np.array_equal(est_default.bias.log_sq, est_explicit.bias.log_sq)
+    M0, S0 = est_default.predict_matrix(nodes, 40.0)
+    M1, S1 = est_explicit.predict_matrix(nodes, 40.0)
+    assert np.array_equal(M0, M1)
+    assert np.array_equal(S0, S1)
+    lo0, hi0 = est_default.predict_interval_node("t0", nodes[0], 40.0)
+    lo1, hi1 = est_explicit.predict_interval_node("t0", nodes[0], 40.0)
+    assert (lo0, hi0) == (lo1, hi1)
+
+
+def test_biasmodel_decay_one_is_bitexact():
+    a = BiasModel(3, 2)
+    b = BiasModel(3, 2, decay=1.0)
+    for rows, cols, lrs in ([[0], [1], [0.3]],
+                            [[1, 2], [0, 1], [0.1, -0.2]],
+                            [[0], [1], [0.05]]):
+        a.update(rows, cols, lrs)
+        b.update(rows, cols, lrs)
+    assert np.array_equal(a.counts, b.counts)
+    assert np.array_equal(a.log_sum, b.log_sum)
+    assert np.array_equal(a.log_sq, b.log_sq)
+    assert np.array_equal(a.matrix(), b.matrix())
+
+
+def test_risk_zero_executor_matches_default():
+    """risk_k=0 + spec_tail=None is the PR 3 loop exactly."""
+    def run(**kw):
+        ex = _spec_scenario(spec_tail=None, seed=31)
+        for k, v in kw.items():
+            setattr(ex, k, v)
+        return ex.run()
+
+    t_default = run()
+    t_explicit = run(risk_k=0.0, spec_tail=None)
+    assert t_default.makespan == t_explicit.makespan
+    assert [(r.id, r.node, r.end) for r in t_default.records] == \
+           [(r.id, r.node, r.end) for r in t_explicit.records]
+
+
+# ---------------------------------------------------------------------------
+# Empirical-Bayes sigma_r pooling
+# ---------------------------------------------------------------------------
+def test_eb_pooled_sigma_beats_fixed_under_heteroscedastic_residuals():
+    """True residual noise is far below the fixed 0.25: the fixed-scale
+    model over-shrinks every pair toward bias 1.0, the EB-pooled one
+    learns the actual (small, pair-varying) spread and lands its
+    posterior means much closer to the true per-pair biases."""
+    rng = np.random.default_rng(0)
+    T, N = 6, 4
+    true_log_bias = rng.normal(0.0, 0.5, (T, N))
+    pair_sd = rng.uniform(0.01, 0.04, (T, N))     # heteroscedastic noise
+    fixed = BiasModel(T, N)                        # sigma_r = 0.25
+    pooled = BiasModel(T, N, empirical_bayes=True)
+    # few observations per pair: this is where the fixed 0.25 noise scale
+    # over-shrinks every posterior toward bias 1.0 while the pooled scale
+    # (~0.03 here) knows each residual is nearly noise-free
+    for _ in range(2):
+        rows, cols = np.meshgrid(np.arange(T), np.arange(N), indexing="ij")
+        lrs = true_log_bias + rng.normal(0.0, pair_sd)
+        fixed.update(rows.ravel(), cols.ravel(), lrs.ravel())
+        pooled.update(rows.ravel(), cols.ravel(), lrs.ravel())
+    # the pooled noise scale found the injected spread, not the 0.25 prior
+    assert pooled.effective_sigma_r() < 0.1
+    assert fixed.effective_sigma_r() == 0.25
+    mu_f, _ = fixed.posterior()
+    mu_p, _ = pooled.posterior()
+    err_f = np.abs(mu_f - true_log_bias).mean()
+    err_p = np.abs(mu_p - true_log_bias).mean()
+    assert err_p < err_f
+
+
+def test_eb_falls_back_to_fixed_until_two_observations():
+    bm = BiasModel(2, 2, empirical_bayes=True)
+    assert bm.effective_sigma_r() == bm.sigma_r
+    bm.update([0], [0], [0.2])
+    assert bm.effective_sigma_r() == bm.sigma_r    # one obs: spread is NaN
+    bm.update([0], [0], [0.3])
+    assert bm.effective_sigma_r() != bm.sigma_r
+
+
+def test_eb_sigma_floor():
+    bm = BiasModel(1, 1, empirical_bayes=True)
+    for _ in range(10):
+        bm.update([0], [0], [0.5])                 # zero spread
+    assert bm.effective_sigma_r() == BiasModel.SIGMA_R_FLOOR
+
+
+# ---------------------------------------------------------------------------
+# Forgetting factor
+# ---------------------------------------------------------------------------
+def test_decay_tracks_drift_faster():
+    """After a regime change in the pair's residual, the decayed posterior
+    reaches the new level while the infinite-memory one still averages
+    the stale history in."""
+    slow = BiasModel(1, 1)
+    fast = BiasModel(1, 1, decay=0.8)
+    for _ in range(30):                            # long stable regime
+        slow.update([0], [0], [0.0])
+        fast.update([0], [0], [0.0])
+    for _ in range(10):                            # drift: bias jumps to 1.5
+        slow.update([0], [0], [np.log(1.5)])
+        fast.update([0], [0], [np.log(1.5)])
+    assert abs(fast.point(0, 0) - 1.5) < abs(slow.point(0, 0) - 1.5)
+    assert fast.point(0, 0) > 1.35
+    assert slow.point(0, 0) < 1.2
+
+
+def test_decay_validated():
+    with pytest.raises(ValueError):
+        BiasModel(1, 1, decay=0.0)
+    with pytest.raises(ValueError):
+        BiasModel(1, 1, decay=1.5)
+
+
+def test_decay_widens_stale_posteriors():
+    """Forgetting drains effective sample count, so an unrefreshed pair's
+    posterior variance grows back toward the prior as other pairs keep
+    updating (each update call is one forgetting step)."""
+    bm = BiasModel(2, 1, decay=0.9)
+    for _ in range(20):
+        bm.update([0], [0], [0.2])
+    _, v0 = bm.posterior()
+    stale_v = v0[0, 0]
+    for _ in range(25):                            # only the OTHER pair
+        bm.update([1], [0], [0.1])
+    _, v1 = bm.posterior()
+    assert v1[0, 0] > stale_v                      # pair 0 grew uncertain
+    assert v1[0, 0] <= bm.tau0 ** 2 + 1e-12        # bounded by the prior
+
+
+# ---------------------------------------------------------------------------
+# Tail mass
+# ---------------------------------------------------------------------------
+def test_tail_mass_unit_behaviour():
+    bm = BiasModel(1, 1)
+    assert bm.tail_mass(0, 0, 1.15) == 0.0         # unobserved: no evidence
+    assert bm.tail_mass(0, 0, -1.0) == 0.0         # unobserved beats edge
+    bm.update([0], [0], [np.log(1.3)])
+    one = bm.tail_mass(0, 0, 1.15)
+    # point estimate exactly at the threshold <=> tail mass exactly 0.5
+    assert bm.tail_mass(0, 0, bm.point(0, 0)) == pytest.approx(0.5)
+    for _ in range(40):
+        bm.update([0], [0], [np.log(1.3)])
+    many = bm.tail_mass(0, 0, 1.15)
+    assert many > one                              # evidence accumulates
+    assert many > 0.99
+    assert bm.tail_mass(0, 0, 2.0) < 0.01          # far above the posterior
+    # bias is a.s. positive: a non-positive threshold holds the full mass,
+    # matching the point-estimate comparison at the same threshold
+    assert bm.tail_mass(0, 0, -1.0) == 1.0
+    assert bm.tail_mass(0, 0, 0.0) == 1.0
+
+
+def test_estimator_bias_tail_mass():
+    est = _fitted(seed=4)
+    node = list(est.target_benches)[0]
+    assert est.bias_tail_mass("t0", node, 1.1) == 0.0
+    m, _ = est.predict("t0", node, 32.0)
+    for _ in range(6):
+        est.observe("t0", node, 32.0, m * 1.5)
+    assert est.bias_tail_mass("t0", node, 1.1) > 0.5
+    assert est.bias_tail_mass("t0", "not-a-node", 1.1) == 0.0
+    est_off = _fitted(seed=4, bias_correction=False)
+    assert est_off.bias_tail_mass("t0", node, 1.1) == 0.0
+
+
+def _spec_scenario(spec_tail, slow=1.8, spec_k=0.5, seed=17):
+    """One node type secretly slower: marginal drift, so the point
+    estimate crosses the admission line on early noisy residuals while
+    the posterior tail mass needs consistent evidence."""
+    rng = np.random.default_rng(seed)
+    local = _bench("local-cpu", 450.0, 420.0)
+    benches = {"tpu-v2": _bench("tpu-v2", 600.0, 500.0),
+               "tpu-v3": _bench("tpu-v3", 650.0, 550.0)}
+    est = LotaruEstimator(local, benches)
+    slopes = {f"t{i}": (i + 1) * 2.0 for i in range(3)}
+    est.fit_tasks(list(slopes), 64.0,
+                  lambda n, s, cf: slopes[n] * s / cf + 5.0,
+                  n_partitions=8)
+    truth = LotaruEstimator(local, benches)
+    truth.fit_tasks(list(slopes), 64.0,
+                    lambda n, s, cf: slopes[n] * s / cf + 5.0,
+                    n_partitions=8)
+    tasks, task_name = fanout_chain_dag(list(slopes), 8)
+    grid = GridEngine.from_types(nodes_per_type=2,
+                                 types=[get_node("tpu-v2"),
+                                        get_node("tpu-v3")])
+    size = 32.0
+
+    def runtime_fn(tid, node):
+        nt = grid.type_of(node).name
+        m, _ = truth.predict(task_name[tid], nt, size)
+        f = slow if nt == "tpu-v2" else 1.0
+        return m * f * float(rng.uniform(0.9, 1.1))
+
+    return OnlineExecutor(est, tasks, task_name, size, grid, runtime_fn,
+                          online=True, confidence=0.2, speculate=True,
+                          spec_k=spec_k, bias_drift=1.1,
+                          spec_tail=spec_tail)
+
+
+def test_tail_mass_admission_fires_less_than_point_estimate():
+    point = _spec_scenario(spec_tail=None).run()
+    tail = _spec_scenario(spec_tail=0.8).run()
+    assert point.speculations > 0
+    assert tail.speculations < point.speculations
+    # same completion guarantee either way
+    assert len(tail.records) == len(point.records) == 24
+
+
+def test_spec_tail_validated():
+    est = _fitted(seed=2)
+    tasks, task_name = fanout_chain_dag(est.task_names(), 2)
+    grid = GridEngine.from_types(nodes_per_type=1)
+    with pytest.raises(ValueError):
+        OnlineExecutor(est, tasks, task_name, 32.0, grid,
+                       lambda t, n: 1.0, spec_tail=1.5)
+
+
+# ---------------------------------------------------------------------------
+# Risk-aware HEFT
+# ---------------------------------------------------------------------------
+def test_risk_aware_heft_reduces_realized_makespan_under_variance():
+    """Node 0 quotes slightly lower means but huge sigma; realised
+    runtimes land at mean + 1 sigma.  Risk-neutral HEFT piles work onto
+    the jittery node and pays for it; risk-aware placement spreads it."""
+    rng = np.random.default_rng(0)
+    T, N = 12, 3
+    mean = rng.uniform(8.0, 12.0, (T, N))
+    mean[:, 0] *= 0.9                              # tempting on paper
+    std = np.full((T, N), 0.3)
+    std[:, 0] = 6.0                                # but wildly uncertain
+    realized = mean + std                          # the bad draw
+    succ = [[] for _ in range(T)]
+    pred = [[] for _ in range(T)]
+
+    def realized_makespan(sched):
+        node_free = np.zeros(N)
+        for t in sched["order"]:
+            j = sched["assignment"][t]
+            node_free[j] += realized[t, j]
+        return node_free.max()
+
+    neutral = heft_schedule_array(succ, pred, mean)
+    averse = heft_schedule_array(succ, pred, mean, uncertainty=std,
+                                 risk_k=1.0)
+    assert realized_makespan(averse) < realized_makespan(neutral)
+
+
+def test_risk_k_inflates_upward_rank_priority():
+    """The effective cost drives the RANK too: an uncertain task becomes
+    more urgent under risk_k, not just differently placed."""
+    succ = [[], []]
+    pred = [[], []]
+    cost = np.array([[10.0, 10.0], [11.0, 11.0]])
+    unc = np.array([[20.0, 20.0], [0.1, 0.1]])
+    plain = heft_schedule_array(succ, pred, cost)
+    risky = heft_schedule_array(succ, pred, cost, uncertainty=unc,
+                                risk_k=1.0)
+    assert list(plain["order"]) == [1, 0]          # higher mean first
+    assert list(risky["order"]) == [0, 1]          # higher risk first
+
+
+def test_heft_dict_wrapper_warns_on_ignored_uncertainty():
+    tasks = {"a": SchedTask(id="a")}
+    cost = {"a": {"n": 1.0}}
+    unc = {"a": {"n": 5.0}}
+    with pytest.warns(UserWarning, match="risk_k == 0"):
+        heft_schedule(tasks, cost, ["n"], uncertainty=unc, risk_k=0.0)
+
+
+def test_predict_matrix_with_std_false_is_mean_only():
+    est = _fitted(seed=6)
+    nodes = list(est.target_benches)
+    m, _ = est.predict("t1", nodes[1], 30.0)
+    est.observe("t1", nodes[1], 30.0, m * 1.4)     # activate a bias pair
+    M, S = est.predict_matrix(nodes, 30.0)
+    M2, S2 = est.predict_matrix(nodes, 30.0, with_std=False)
+    assert S2 is None
+    assert np.array_equal(M2, M)
+
+
+def test_executor_risk_k_steers_off_high_variance_node():
+    """End-to-end: with a drifted, high-variance pair learned online, the
+    risk-aware executor re-plans remaining work off that node at least as
+    well as the risk-neutral one (never worse makespan here)."""
+    neutral = _spec_scenario(spec_tail=None, slow=2.5, seed=23)
+    neutral.risk_k = 0.0
+    risky = _spec_scenario(spec_tail=None, slow=2.5, seed=23)
+    risky.risk_k = 1.5
+    tn = neutral.run()
+    tr = risky.run()
+    assert len(tr.records) == len(tn.records)
+    assert tr.makespan <= tn.makespan * 1.05
+
+
+# ---------------------------------------------------------------------------
+# Persistence of the v4 hyperparameters
+# ---------------------------------------------------------------------------
+def test_save_load_roundtrips_bias_hyperparams(tmp_path):
+    est = _fitted(seed=8, bias_decay=0.95, bias_sigma_r=0.1,
+                  bias_empirical_bayes=True)
+    node = list(est.target_benches)[0]
+    m, _ = est.predict("t0", node, 30.0)
+    est.observe("t0", node, 30.0, m * 1.2)
+    p = tmp_path / "est.json"
+    est.save(p)
+    d = json.loads(p.read_text())
+    assert d["version"] == 4
+    assert d["bias_opts"] == {"decay": 0.95, "sigma_r": 0.1,
+                              "empirical_bayes": True}
+    loaded = LotaruEstimator.load(p)
+    assert loaded.bias.decay == 0.95
+    assert loaded.bias.sigma_r == 0.1
+    assert loaded.bias.empirical_bayes is True
+    nodes = list(est.target_benches)
+    M0, S0 = est.predict_matrix(nodes, 40.0)
+    M1, S1 = loaded.predict_matrix(nodes, 40.0)
+    np.testing.assert_allclose(M1, M0, rtol=5e-4, atol=1e-6)
+    np.testing.assert_allclose(S1, S0, rtol=5e-4, atol=1e-6)
+
+
+def test_v3_file_without_opts_loads_with_inert_defaults(tmp_path):
+    est = _fitted(seed=9)
+    node = list(est.target_benches)[0]
+    est.observe("t0", node, 30.0, 200.0)
+    p = tmp_path / "v3.json"
+    est.save(p)
+    d = json.loads(p.read_text())
+    d["version"] = 3
+    del d["bias_opts"]
+    for k in ("decay", "empirical_bayes"):
+        del d["bias"]["state"][k]
+    p.write_text(json.dumps(d))
+    loaded = LotaruEstimator.load(p)
+    assert loaded.bias.decay == 1.0
+    assert loaded.bias.empirical_bayes is False
+    assert np.array_equal(loaded.bias.counts, est.bias.counts)
+
+
+# ---------------------------------------------------------------------------
+# Heteroscedastic simulator noise (the regime risk pricing targets)
+# ---------------------------------------------------------------------------
+def test_simulator_het_noise_varies_per_pair_and_default_is_bitexact():
+    from repro.sched.workflows import WORKFLOWS
+    task = WORKFLOWS["eager"][0]
+    node = get_node("tpu-v2")
+    plain = ClusterSimulator(seed=1)
+    het0 = ClusterSimulator(seed=1, het=0.0)
+    assert plain.run_task(task, node, 8.0) == het0.run_task(task, node, 8.0)
+    het = ClusterSimulator(seed=1, het=3.0)
+    sds = {het.noise_sd(t.name, n.name)
+           for t in WORKFLOWS["eager"] for n in (node, get_node("tpu-v3"))}
+    assert len(sds) > 1                            # pair-dependent
+    assert min(sds) >= het.noise
+    assert het.noise_sd(task.name, node.name) == \
+        het.noise_sd(task.name, node.name)         # a fixed pair property
