@@ -23,6 +23,13 @@ Three measurements:
    (the systematic efficiency IS a per-pair multiplicative bias), and
    the risk arm must win or tie the bias arm's final makespan on most
    workflows (pricing posterior width steers work off jittery pairs).
+
+A fourth section (``faults``) sweeps the default crash scenario — two
+nodes dying mid-run plus a ~5% per-attempt failure probability — and
+checks that the fault-tolerant loop (retries with capped backoff,
+censored observations, Beta-Binomial reliability pricing) completes
+100% of every workflow within a committed makespan-inflation bound,
+while the frozen static plan strands the dead nodes' work.
 """
 from __future__ import annotations
 
@@ -40,7 +47,7 @@ import numpy as np
 from repro.core import LotaruEstimator, blr, get_node, profile_cluster, \
     profile_node, target_nodes
 from repro.online import OnlineExecutor, fanout_chain_dag
-from repro.sched.simulator import ClusterSimulator, GridEngine
+from repro.sched.simulator import ClusterSimulator, FaultInjector, GridEngine
 from repro.sched.workflows import INPUTS, WORKFLOWS
 
 OUT = Path(__file__).resolve().parents[1] / "BENCH_online.json"
@@ -186,9 +193,17 @@ def bench_workflows(n_samples: int = 8, nodes_per_type: int = 2,
                 risk_k=RISK_K if risk else 0.0,
                 spec_tail=SPEC_TAIL if risk else None)
 
+        # clear the jit cache between arms: every arm compiles its own
+        # spread of XLA executables (one scan per distinct tick batch
+        # size, one HEFT solve per frontier shape) and the leftover
+        # modules exhaust the kernel's vm.max_map_count long before
+        # they exhaust memory
         static = make_executor(online=False).run()
+        jax.clear_caches()
         nobias = make_executor(online=True, bias_correction=False).run()
+        jax.clear_caches()
         online = make_executor(online=True).run()
+        jax.clear_caches()
         risk = make_executor(online=True, risk=True).run()
         traj_s = static.cumulative_mpe()
         traj_o = online.cumulative_mpe()
@@ -214,6 +229,11 @@ def bench_workflows(n_samples: int = 8, nodes_per_type: int = 2,
             "risk_speculations": risk.speculations,
             "risk_spec_wins": risk.spec_wins,
         }
+        # every workflow/arm combination compiles its own set of XLA
+        # executables (frontier sizes vary per re-plan); left to
+        # accumulate across the sweep they exhaust the kernel's
+        # vm.max_map_count before they exhaust memory
+        jax.clear_caches()
     wins = sum(1 for r in results.values()
                if r["mpe_online"] < r["mpe_static"])
     bias_wins = sum(1 for r in results.values()
@@ -234,13 +254,104 @@ def bench_workflows(n_samples: int = 8, nodes_per_type: int = 2,
             "n_workflows": len(results)}
 
 
+FAULT_P = 0.05           # base per-attempt failure probability
+FAULT_REL_K = 1.0        # reliability pricing: 1/(E[p] - k*sd)
+FAULT_MAX_ATTEMPTS = 6   # per-task attempt budget
+INFLATION_BOUND = 2.5    # FT makespan <= bound * fault-free makespan
+
+
+def bench_fault_tolerance(n_samples: int = 8, nodes_per_type: int = 2,
+                          seed: int = 0):
+    """Fifth arm: the default crash sweep — two nodes die mid-run and
+    every attempt carries a ~5% failure probability.  The fault-tolerant
+    loop (retry + backoff + censored observations + reliability-priced
+    HEFT) must complete 100% of every workflow with bounded makespan
+    inflation over its own fault-free run, while the static plan strands
+    whatever its dead nodes owned."""
+    local = get_node("local-cpu")
+    local_bench = profile_node(local, np.random.default_rng(seed + 7))
+    tbenches = profile_cluster(target_nodes(), seed=seed + 13)
+    truth = ClusterSimulator(seed=seed + 2000)
+    results = {}
+    for wf in WORKFLOWS:
+        size = INPUTS[(wf, 1)]
+        by_name = {t.name: t for t in WORKFLOWS[wf]}
+        tasks, task_name = fanout_chain_dag(list(by_name), n_samples)
+        truth_tab = {(tid, nt.name): truth.run_task(by_name[task_name[tid]],
+                                                    nt, size)
+                     for tid in tasks for nt in target_nodes()}
+
+        def make_executor(online: bool, faults=None, strict: bool = True):
+            sim = ClusterSimulator(seed=seed)     # same local runs each time
+            est = LotaruEstimator(local_bench, tbenches,
+                                  bias_correction=True,
+                                  bias_empirical_bayes=True)
+            est.fit_tasks(list(by_name), size,
+                          lambda n, s, cf: sim.run_task(by_name[n], local, s,
+                                                        cpu_factor=cf))
+            grid = GridEngine.from_types(nodes_per_type=nodes_per_type)
+            return OnlineExecutor(
+                est, tasks, task_name, size, grid,
+                lambda tid, node: truth_tab[(tid, grid.type_of(node).name)],
+                online=online, confidence=0.9,
+                risk_k=RISK_K, spec_tail=SPEC_TAIL,
+                faults=faults, rel_k=FAULT_REL_K,
+                max_attempts=FAULT_MAX_ATTEMPTS, strict=strict)
+
+        ref = make_executor(online=True).run()    # fault-free reference
+        jax.clear_caches()   # see bench_workflows: bounds mmap growth
+        names = list(GridEngine.from_types(
+            nodes_per_type=nodes_per_type).nodes)
+        crash = {names[0]: 0.25 * ref.makespan,
+                 names[-1]: 0.5 * ref.makespan}
+
+        def faults():
+            return FaultInjector(crash_at=crash, p_fail=FAULT_P,
+                                 seed=seed + 31)
+
+        ft = make_executor(online=True, faults=faults()).run()
+        jax.clear_caches()
+        static = make_executor(online=False, faults=faults(),
+                               strict=False).run()
+        results[wf] = {
+            "instances": len(tasks),
+            "makespan_ref": ref.makespan,
+            "makespan_ft": ft.makespan,
+            "inflation": ft.makespan / ref.makespan,
+            "ft_completed_fraction": ft.completed_fraction(),
+            "static_completed_fraction": static.completed_fraction(),
+            "failures": ft.failures,
+            "retries": ft.retries,
+            "lost_nodes": ft.lost_nodes,
+            "censored": len(ft.censored),
+            "ft_replans": ft.replans,
+        }
+        jax.clear_caches()   # see bench_workflows: bounds mmap growth
+    complete = sum(1 for r in results.values()
+                   if r["ft_completed_fraction"] >= 1.0)
+    max_inflation = max(r["inflation"] for r in results.values())
+    static_strands = sum(1 for r in results.values()
+                         if r["static_completed_fraction"] < 1.0)
+    return {"workflows": results, "n_samples": n_samples,
+            "nodes_per_type": nodes_per_type,
+            "p_fail": FAULT_P, "rel_k": FAULT_REL_K,
+            "max_attempts": FAULT_MAX_ATTEMPTS,
+            "inflation_bound": INFLATION_BOUND,
+            "ft_complete": complete, "max_inflation": max_inflation,
+            "static_strands": static_strands,
+            "n_workflows": len(results)}
+
+
 def run(n_tasks: int = 1000, n_samples: int = 8,
         nodes_per_type: int = 2) -> list[tuple]:
     thr = bench_update_throughput(n_tasks=n_tasks)
     eq = bench_equivalence(n_tasks=max(50, n_tasks // 5))
     wf = bench_workflows(n_samples=n_samples, nodes_per_type=nodes_per_type)
+    fl = bench_fault_tolerance(n_samples=n_samples,
+                               nodes_per_type=nodes_per_type)
     result = {"config": {"n_tasks": n_tasks, "x64": True},
-              "throughput": thr, "equivalence": eq, "execution": wf}
+              "throughput": thr, "equivalence": eq, "execution": wf,
+              "faults": fl}
     OUT.write_text(json.dumps(result, indent=2))
     print(f"update: {thr['update_s']*1e6:.0f}us/obs vs refit "
           f"{thr['refit_s']*1e3:.1f}ms -> "
@@ -265,6 +376,16 @@ def run(n_tasks: int = 1000, n_samples: int = 8,
           f"bias-vs-PR2 wins: {wf['bias_mpe_wins']}/{wf['n_workflows']}  "
           f"risk makespan win-or-tie: "
           f"{wf['risk_makespan_wins']}/{wf['n_workflows']}")
+    for name, r in fl["workflows"].items():
+        print(f"  {name:10s} faults: FT {r['ft_completed_fraction']:.0%} "
+              f"complete @ {r['inflation']:.2f}x makespan "
+              f"(static {r['static_completed_fraction']:.0%}; "
+              f"{r['failures']} failures/{r['retries']} retries/"
+              f"{r['lost_nodes']} lost nodes/{r['censored']} censored)")
+    print(f"fault arm: {fl['ft_complete']}/{fl['n_workflows']} complete, "
+          f"max inflation {fl['max_inflation']:.2f}x "
+          f"(bound {fl['inflation_bound']}x), static strands on "
+          f"{fl['static_strands']}/{fl['n_workflows']}")
     print(f"wrote {OUT}")
     return [("bench_online.update_throughput", thr["update_s"] * 1e6,
              f"speedup={thr['update_speedup_vs_refit']:.0f}x"),
@@ -276,7 +397,10 @@ def run(n_tasks: int = 1000, n_samples: int = 8,
             ("bench_online.bias_mpe_wins", 0.0,
              f"{wf['bias_mpe_wins']}/{wf['n_workflows']}"),
             ("bench_online.risk_makespan_wins", 0.0,
-             f"{wf['risk_makespan_wins']}/{wf['n_workflows']}")]
+             f"{wf['risk_makespan_wins']}/{wf['n_workflows']}"),
+            ("bench_online.fault_completion", 0.0,
+             f"{fl['ft_complete']}/{fl['n_workflows']};"
+             f"inflation={fl['max_inflation']:.2f}x")]
 
 
 if __name__ == "__main__":

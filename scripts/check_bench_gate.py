@@ -10,7 +10,12 @@ useless when bisecting which workflow moved):
 * the risk-aware arm (bias + EB sigma_r + risk_k HEFT + tail-mass
   speculation) must win or tie the bias arm's final makespan on >= 3 of
   the 5 workflows (PR 4 invariant; ties count — risk pricing that leaves
-  the argmin placement unchanged is not a regression).
+  the argmin placement unchanged is not a regression);
+* under the default crash sweep (two nodes dying mid-run + ~5% attempt
+  failures) the fault-tolerant arm must complete 100% of EVERY workflow
+  with makespan inflation within the committed bound, and the static
+  baseline must strand work somewhere (otherwise the scenario has gone
+  soft and proves nothing) — PR 5 invariant.
 """
 import json
 import sys
@@ -37,34 +42,77 @@ GATES = {
 }
 
 
+#: fault-section gates: name -> (predicate over one workflow record given
+#: the section, min fraction, summary key).  Separate table because the
+#: records live under ``faults``, not ``execution``.
+FAULT_GATES = {
+    "fault-arm 100% completion": (
+        lambda r, f: r["ft_completed_fraction"] >= 1.0, 1.0,
+        "ft_complete"),
+    "fault-arm makespan inflation": (
+        lambda r, f: r["inflation"] <= f["inflation_bound"], 1.0,
+        None),
+    "static baseline strands work": (
+        lambda r, f: r["static_completed_fraction"] < 1.0, 0.6,
+        "static_strands"),
+}
+
+
+def _check(name, pred, frac, summary_key, wfs, section, detail_fn):
+    n = len(wfs)
+    need = max(1, int(round(frac * n)))
+    losers = [wf for wf, r in wfs.items() if not pred(r)]
+    wins = n - len(losers)
+    status = "ok  " if wins >= need else "FAIL"
+    print(f"{status} {name}: {wins}/{n} (need >= {need})")
+    ok = wins >= need
+    if summary_key and summary_key in section and \
+            section[summary_key] != wins:
+        print(f"FAIL {name}: gate recount {wins} != bench summary "
+              f"{summary_key}={section[summary_key]} — the two win "
+              "definitions have drifted apart")
+        ok = False
+    for wf in losers:
+        marker = "regressed" if wins < need else "lost (within budget)"
+        print(f"       {wf}: {marker} — {detail_fn(wfs[wf])}")
+    return ok
+
+
 def main() -> int:
-    e = json.loads(BENCH.read_text())["execution"]
-    wfs = e["workflows"]
-    n = e["n_workflows"]
+    bench = json.loads(BENCH.read_text())
+    e = bench["execution"]
     ok = True
+
+    def exec_detail(r):
+        return (f"static={r['mpe_static']:.3f} "
+                f"PR2={r['mpe_online_nobias']:.3f} "
+                f"bias={r['mpe_online']:.3f} "
+                f"risk={r['mpe_online_risk']:.3f} | makespan "
+                f"bias={r['makespan_online']:.0f} "
+                f"risk={r['makespan_online_risk']:.0f}")
+
     for name, (pred, frac, summary_key) in GATES.items():
-        need = max(1, int(round(frac * n)))
-        losers = [wf for wf, r in wfs.items() if not pred(r)]
-        wins = n - len(losers)
-        status = "ok  " if wins >= need else "FAIL"
-        print(f"{status} {name}: {wins}/{n} (need >= {need})")
-        if wins < need:
-            ok = False
-        if summary_key in e and e[summary_key] != wins:
-            print(f"FAIL {name}: gate recount {wins} != bench summary "
-                  f"{summary_key}={e[summary_key]} — the two win "
-                  "definitions have drifted apart")
-            ok = False
-        for wf in losers:
-            r = wfs[wf]
-            detail = (f"static={r['mpe_static']:.3f} "
-                      f"PR2={r['mpe_online_nobias']:.3f} "
-                      f"bias={r['mpe_online']:.3f} "
-                      f"risk={r['mpe_online_risk']:.3f} | makespan "
-                      f"bias={r['makespan_online']:.0f} "
-                      f"risk={r['makespan_online_risk']:.0f}")
-            marker = "regressed" if wins < need else "lost (within budget)"
-            print(f"       {wf}: {marker} — {detail}")
+        ok &= _check(name, pred, frac, summary_key, e["workflows"], e,
+                     exec_detail)
+
+    f = bench.get("faults")
+    if f is None:
+        print("FAIL fault section missing from BENCH_online.json — "
+              "bench_online predates the fault arm or was truncated")
+        ok = False
+    else:
+        def fault_detail(r):
+            return (f"completed {r['ft_completed_fraction']:.0%} "
+                    f"(static {r['static_completed_fraction']:.0%}) "
+                    f"inflation {r['inflation']:.2f}x "
+                    f"(bound {f['inflation_bound']}x) | "
+                    f"{r['failures']} failures/{r['retries']} retries/"
+                    f"{r['lost_nodes']} lost nodes")
+
+        for name, (pred, frac, summary_key) in FAULT_GATES.items():
+            ok &= _check(name, lambda r, p=pred: p(r, f), frac,
+                         summary_key, f["workflows"], f, fault_detail)
+
     if not ok:
         print("-- GATE FAILED")
     return 0 if ok else 1

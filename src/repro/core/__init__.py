@@ -3,7 +3,7 @@ system — infrastructure profiling, downsampled local execution, Bayesian
 linear regression with Pearson gating, per-node factor adjustment — plus
 the accelerator-plane integration (LotaruML) that feeds the scheduler."""
 from .blr import (BatchedTaskModel, BiasModel, BLRPosterior, OnlineStats,
-                  TaskModel,
+                  ReliabilityModel, TaskModel,
                   fit, fit_batch, fit_task, fit_task_batch, pearson,
                   pearson_batch, predict, predict_batch, predict_batch_grid,
                   predict_interval, predict_task_batch,
@@ -22,7 +22,7 @@ from .profiler import BenchResult, profile_cluster, profile_local, profile_node
 
 __all__ = [
     "BatchedTaskModel", "BiasModel", "BLRPosterior", "OnlineStats",
-    "TaskModel", "fit",
+    "ReliabilityModel", "TaskModel", "fit",
     "fit_batch", "fit_task", "fit_task_batch", "pearson", "pearson_batch",
     "predict", "predict_batch", "predict_batch_grid", "predict_interval",
     "predict_task_batch", "predict_task_batch_grid", "slice_task_model",

@@ -867,6 +867,107 @@ class BiasModel:
                    counts=counts, log_sum=d["log_sum"], log_sq=d["log_sq"])
 
 
+# ---------------------------------------------------------------------------
+# Per-node attempt reliability — Beta–Binomial posterior on success rate
+# ---------------------------------------------------------------------------
+class ReliabilityModel:
+    """Per-node attempt-success posterior learned online.
+
+    The runtime posterior prices how LONG a task runs on a node; this
+    prices whether an attempt there FINISHES at all.  Model each node's
+    attempt-success probability with the conjugate Beta–Binomial:
+
+        p_j ~ Beta(a0, b0),   attempt outcomes ~ Bernoulli(p_j)
+
+    so after s successes and f failures the posterior is
+    ``Beta(a0 + s, b0 + f)`` in closed form — the same Bayesian story the
+    estimator tells for runtimes, extended to availability.  A task whose
+    attempts fail must be retried, so with independent attempts the
+    expected number of tries until success is ``1/p`` and the expected
+    time-to-success on node j is ``mean_j / p_j``.  Schedulers therefore
+    consume the multiplicative **reliability factor**
+
+        factor(j, k) = 1 / max(E[p_j] - k * sd[p_j], P_FLOOR)
+
+    where ``k`` widens by the posterior sd exactly like the runtime
+    plane's ``risk_k`` — a node with few observed attempts keeps a wide
+    posterior and is priced cautiously until evidence narrows it, and a
+    flaky node's factor grows as failures accrue, pricing it out of HEFT
+    placements.
+
+    The prior (``a0=8, b0=1`` → E[p] ≈ 0.89) is deliberately optimistic
+    and UNIFORM across nodes: before any evidence every node carries the
+    same factor, so relative placement is (near-)unchanged and the layer
+    only differentiates nodes as attempt outcomes stream in.  State is a
+    plain ``{node: [successes, failures]}`` dict — JSON-serialisable for
+    the estimator checkpoint (schema v5).
+    """
+
+    __slots__ = ("a0", "b0", "state")
+
+    #: floor on the widened success probability — a node that failed every
+    #: observed attempt must stay priceable (finite factor), not divide by
+    #: zero; 0.05 caps the factor at 20x
+    P_FLOOR = 0.05
+
+    def __init__(self, a0: float = 8.0, b0: float = 1.0, state=None):
+        if a0 <= 0 or b0 <= 0:
+            raise ValueError(f"Beta prior needs a0, b0 > 0, got {a0}, {b0}")
+        self.a0 = float(a0)
+        self.b0 = float(b0)
+        self.state: dict[str, list[float]] = {
+            str(k): [float(v[0]), float(v[1])]
+            for k, v in (state or {}).items()}
+
+    def record(self, node: str, success: bool, weight: float = 1.0) -> None:
+        """Absorb one attempt outcome on ``node`` (a kill the *scheduler*
+        ordered — e.g. a lost speculative race — is not a node failure
+        and must not be recorded)."""
+        s, f = self.state.setdefault(str(node), [0.0, 0.0])
+        if success:
+            self.state[str(node)][0] = s + weight
+        else:
+            self.state[str(node)][1] = f + weight
+
+    def counts(self, node: str) -> tuple[float, float]:
+        s, f = self.state.get(str(node), (0.0, 0.0))
+        return float(s), float(f)
+
+    def _ab(self, node: str) -> tuple[float, float]:
+        s, f = self.counts(node)
+        return self.a0 + s, self.b0 + f
+
+    def p_mean(self, node: str) -> float:
+        """Posterior mean success probability E[p] = a/(a+b)."""
+        a, b = self._ab(node)
+        return a / (a + b)
+
+    def p_sd(self, node: str) -> float:
+        """Posterior sd of p: sqrt(ab / ((a+b)^2 (a+b+1)))."""
+        a, b = self._ab(node)
+        return float(np.sqrt(a * b / ((a + b) ** 2 * (a + b + 1.0))))
+
+    def factor(self, node: str, k: float = 1.0) -> float:
+        """Expected time-to-success multiplier ``1 / p_eff`` with the
+        uncertainty-widened ``p_eff = max(E[p] - k*sd[p], P_FLOOR)``.
+        Always finite (>= 1, capped at 1/P_FLOOR); what matters is the
+        ORDERING: flakier and less-certain nodes price higher."""
+        p_eff = max(self.p_mean(node) - k * self.p_sd(node), self.P_FLOOR)
+        return 1.0 / p_eff
+
+    def factors(self, nodes, k: float = 1.0) -> np.ndarray:
+        """(N,) reliability factors in ``nodes`` order."""
+        return np.array([self.factor(n, k) for n in nodes], np.float64)
+
+    def to_dict(self) -> dict:
+        return {"a0": self.a0, "b0": self.b0,
+                "state": {k: list(v) for k, v in self.state.items()}}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ReliabilityModel":
+        return cls(a0=d["a0"], b0=d["b0"], state=d["state"])
+
+
 def update_task_batch_stream(model: BatchedTaskModel, task_idx, x, y, *,
                              prior_scale: float = 10.0, a0: float = 1.0,
                              b0: float = 1.0,

@@ -26,17 +26,18 @@ from scipy import stats as _scipy_stats
 
 from .adjust import (cpu_weight, deviation, roofline_weights, runtime_factor,
                      runtime_factor3, stack_benches)
-from .blr import (BatchedTaskModel, BiasModel, TaskModel, fit_task,
-                  fit_task_batch, predict_interval, predict_task_batch,
-                  slice_task_model, stack_task_models, unstack_task_models,
-                  update_task_batch_stream)
+from .blr import (BatchedTaskModel, BiasModel, ReliabilityModel, TaskModel,
+                  fit_task, fit_task_batch, predict_interval,
+                  predict_task_batch, slice_task_model, stack_task_models,
+                  unstack_task_models, update_task_batch_stream)
 from .downsample import partition_sizes
 from .profiler import BenchResult
 
-SCHEMA_VERSION = 4   # LotaruEstimator.save/load on-disk format
+SCHEMA_VERSION = 5   # LotaruEstimator.save/load on-disk format
 # v1: raw samples only (refit on load)     v2: + fitted posteriors
 # v3: + per-(task, node) bias state        v4: + bias hyperparameters
-#                                               (decay, empirical_bayes)
+# v5: + per-node reliability posterior          (decay, empirical_bayes)
+#      (Beta-Binomial attempt-success state)
 # Every version still loads; see docs/architecture.md for the field map.
 
 
@@ -88,6 +89,11 @@ class _BiasLayer:
         are bit-exact with the hyperparameter-free layer."""
         self.bias_correction = bias_correction
         self.bias: BiasModel | None = None
+        # per-node attempt-reliability posterior (lazily created on the
+        # first recorded attempt, like the bias state): keyed by node
+        # *instance* name, since availability is a property of the
+        # machine, not its hardware type
+        self.reliability: ReliabilityModel | None = None
         self._bias_opts = {"decay": float(decay), "sigma_r": float(sigma_r),
                            "empirical_bayes": bool(empirical_bayes)}
         self.bias_nodes = ([self.local_bench.node]
@@ -169,6 +175,33 @@ class _BiasLayer:
         if j is None:
             return 0.0
         return self.bias.tail_mass(self._row_of(name), j, threshold)
+
+    # ---- per-node attempt reliability (availability plane) ----------------
+    def record_attempt(self, node: str, success: bool) -> None:
+        """Feed one attempt outcome on ``node`` into the Beta–Binomial
+        reliability posterior (created lazily on first use).  Crashed
+        or failed attempts count as failures; scheduler-ordered kills
+        (a lost speculative race) must NOT be recorded — the node did
+        nothing wrong."""
+        if self.reliability is None:
+            self.reliability = ReliabilityModel()
+        self.reliability.record(node, success)
+
+    def reliability_factor(self, node: str, k: float = 1.0) -> float:
+        """Expected time-to-success multiplier for ``node`` —
+        ``1 / (E[p_success] - k·sd)``, floored; 1.0 while no attempt has
+        ever been recorded (the layer is inert until evidence exists,
+        like the bias posterior)."""
+        if self.reliability is None:
+            return 1.0
+        return self.reliability.factor(node, k)
+
+    def reliability_factors(self, nodes, k: float = 1.0) -> np.ndarray:
+        """(N,) reliability factors in ``nodes`` order (all-ones while
+        the reliability state is empty)."""
+        if self.reliability is None:
+            return np.ones(len(nodes), np.float64)
+        return self.reliability.factors(nodes, k)
 
 
 @jax.jit
@@ -539,13 +572,15 @@ class LotaruEstimator(_BiasLayer):
     # ---- offline reuse (paper §1: "allows for offline scenarios where the
     # learned models are reused for future executions") -----------------
     def save(self, path) -> None:
-        """Schema v4: persists the fitted posteriors themselves (v2), the
-        online per-(task, node) bias state (v3), and the bias
+        """Schema v5: persists the fitted posteriors themselves (v2), the
+        online per-(task, node) bias state (v3), the bias
         hyperparameters — forgetting factor ``decay`` and the
-        ``empirical_bayes`` noise pooling (v4) — so a save → load round
-        trip reproduces predictions bit-exactly, including everything
-        learned from streamed observations.  Earlier files still load:
-        missing v4 fields default to the inert (bit-exact) values."""
+        ``empirical_bayes`` noise pooling (v4) — and the per-node
+        Beta–Binomial reliability posterior (v5), so a save → load round
+        trip reproduces predictions AND availability pricing bit-exactly,
+        including everything learned from streamed observations and
+        attempt outcomes.  Earlier files still load: missing v4/v5
+        fields default to the inert (bit-exact) values."""
         import json
         from pathlib import Path
         out = {"version": SCHEMA_VERSION,
@@ -555,6 +590,8 @@ class LotaruEstimator(_BiasLayer):
                "bias": None if self.bias is None else {
                    "nodes": list(self.bias_nodes),
                    "state": self.bias.to_dict()},
+               "reliability": (None if self.reliability is None
+                               else self.reliability.to_dict()),
                "local_bench": self.local_bench.to_dict(),
                "target_benches": {k: v.to_dict()
                                   for k, v in self.target_benches.items()},
@@ -599,6 +636,8 @@ class LotaruEstimator(_BiasLayer):
             est.bias_nodes = list(d["bias"]["nodes"])
             est._bias_col = {n: j for j, n in enumerate(est.bias_nodes)}
             est.bias = BiasModel.from_dict(d["bias"]["state"])
+        if version >= 5 and d.get("reliability") is not None:
+            est.reliability = ReliabilityModel.from_dict(d["reliability"])
         dt = _default_dtype()
         for name, rec in d["tasks"].items():
             sizes = np.asarray(rec["sizes"])

@@ -7,9 +7,9 @@ event-driven execution engine that interleaves run → observe → re-predict
 → re-schedule over grid-engine-style heterogeneous nodes.
 """
 from .buffer import Observation, ObservationBuffer
-from .executor import (ExecutionTrace, OnlineExecutor, TaskRun,
+from .executor import (CensoredRun, ExecutionTrace, OnlineExecutor, TaskRun,
                        fanout_chain_dag, run_static_and_online)
 
-__all__ = ["Observation", "ObservationBuffer", "ExecutionTrace",
-           "OnlineExecutor", "TaskRun", "fanout_chain_dag",
-           "run_static_and_online"]
+__all__ = ["Observation", "ObservationBuffer", "CensoredRun",
+           "ExecutionTrace", "OnlineExecutor", "TaskRun",
+           "fanout_chain_dag", "run_static_and_online"]

@@ -53,6 +53,27 @@ class TaskRun:
         return abs(self.pred_mean - self.runtime) / max(self.runtime, 1e-12)
 
 
+@dataclass(frozen=True)
+class CensoredRun:
+    """A killed or crashed attempt: the task did NOT finish, so its
+    elapsed time is only a *lower bound* on the true runtime — it is
+    kept out of the runtime posterior (a censored observation would bias
+    it low) but logged here and fed to the reliability model as a failed
+    attempt."""
+    id: str
+    name: str             # abstract task name (estimator row)
+    node: str             # node instance the attempt died on
+    node_type: str
+    start: float
+    lost_at: float        # when the failure manifested / the node died
+    reason: str           # "attempt" (task-level failure) | "node" (crash)
+
+    @property
+    def elapsed(self) -> float:
+        """Runtime lower bound: how long the attempt ran before dying."""
+        return self.lost_at - self.start
+
+
 @dataclass
 class ExecutionTrace:
     records: list[TaskRun] = field(default_factory=list)
@@ -61,7 +82,19 @@ class ExecutionTrace:
     surprises: int = 0
     speculations: int = 0      # straggler copies launched (bias coupling)
     spec_wins: int = 0         # copies that finished before the original
+    failures: int = 0          # attempts lost to faults (task- or node-level)
+    retries: int = 0           # re-queued attempts (after backoff)
+    lost_nodes: int = 0        # node-down events (crashes + outage starts)
+    stranded: int = 0          # tasks abandoned (non-strict mode only)
+    completed: int = 0         # tasks that finished
+    total: int = 0             # tasks in the DAG
+    censored: list[CensoredRun] = field(default_factory=list)
     observations: ObservationBuffer = field(default_factory=ObservationBuffer)
+
+    def completed_fraction(self) -> float:
+        """Fraction of DAG tasks that actually finished (1.0 in strict
+        mode, which raises rather than strand work)."""
+        return self.completed / self.total if self.total else 1.0
 
     def errors(self) -> np.ndarray:
         """Per-task prediction errors in completion order."""
@@ -120,6 +153,43 @@ class OnlineExecutor:
         estimate — a single noisy residual can move the posterior mean
         across the drift line, but not drag most of its mass across —
         so tail-mass admission launches fewer, better-justified copies.
+    faults : ``FaultInjector`` describing node crashes, transient
+        outages and per-attempt failure probabilities — or ``None``
+        (default), which keeps the fault-free loop bit-exact.  With an
+        injector attached the loop becomes fault-tolerant: lost running
+        attempts are detected the moment their node dies (or their
+        deterministic failure time fires), recorded as *censored*
+        observations (elapsed time is a runtime lower bound — logged in
+        ``trace.censored`` and fed to the reliability posterior, never
+        to the runtime posterior), and re-queued with capped exponential
+        backoff under a per-task attempt budget; orphaned queue entries
+        on a dead node trigger a frontier re-plan, as does a node
+        rejoining after an outage.
+    max_attempts : per-task attempt budget.  A task whose every attempt
+        fails raises a ``RuntimeError`` naming the task once the budget
+        is exhausted (strict mode) or is stranded (``strict=False``).
+    backoff_base / backoff_cap : retry delay after the k-th failure is
+        ``min(backoff_base * 2**(k-1), backoff_cap)`` — capped
+        exponential backoff, so a flapping task neither hammers the
+        cluster nor waits unboundedly.
+    rel_k : reliability-aware placement knob (``None`` = off, bit-exact
+        with PR 4).  Every (re-)plan multiplies each node's column of
+        the effective cost by the estimator's per-node reliability
+        factor ``1 / (E[p_success] - rel_k·sd)`` — the Beta–Binomial
+        expected time-to-success, uncertainty-widened exactly like
+        ``risk_k`` widens runtimes — so flaky nodes price out of HEFT
+        placements as attempt failures accrue.  Completions and
+        failures feed the posterior via ``estimator.record_attempt``
+        (reliability is also tracked whenever ``faults`` is set, even
+        with pricing off, so the evidence is there when pricing turns
+        on).
+    strict : ``True`` (default) raises on exhausted attempt budgets and
+        execution stalls; ``False`` strands the affected tasks (and,
+        transitively, their dependents) and returns a partial trace —
+        ``trace.stranded`` / ``trace.completed_fraction()`` quantify the
+        damage.  The static-plan-under-faults baseline runs non-strict:
+        stranding work is exactly the failure mode the fault-tolerant
+        loop exists to prevent.
     """
 
     def __init__(self, estimator, tasks: dict[str, SchedTask],
@@ -128,9 +198,17 @@ class OnlineExecutor:
                  confidence: float = 0.9, risk_k: float = 0.0,
                  replan_cooldown: int = 0, speculate: bool = True,
                  spec_k: float = 2.0, bias_drift: float = 1.15,
-                 spec_tail: float | None = None):
+                 spec_tail: float | None = None,
+                 faults=None, max_attempts: int = 4,
+                 backoff_base: float = 1.0, backoff_cap: float = 30.0,
+                 rel_k: float | None = None, strict: bool = True):
         if spec_tail is not None and not 0.0 < spec_tail < 1.0:
             raise ValueError(f"spec_tail must be in (0, 1), got {spec_tail}")
+        if max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got {max_attempts}")
+        if backoff_base < 0 or backoff_cap < 0:
+            raise ValueError("backoff_base/backoff_cap must be >= 0, got "
+                             f"{backoff_base}/{backoff_cap}")
         self.est = estimator
         self.tasks = tasks
         self.task_name = task_name
@@ -145,6 +223,17 @@ class OnlineExecutor:
         self.spec_k = spec_k
         self.bias_drift = bias_drift
         self.spec_tail = spec_tail
+        self.faults = faults
+        self.max_attempts = max_attempts
+        self.backoff_base = float(backoff_base)
+        self.backoff_cap = float(backoff_cap)
+        self.rel_k = rel_k
+        self.strict = strict
+        # track attempt outcomes in the reliability posterior whenever a
+        # fault process exists or reliability pricing is on (and the
+        # estimator has the availability plane at all)
+        self._track_rel = ((faults is not None or rel_k is not None)
+                           and hasattr(estimator, "record_attempt"))
         self.node_names = grid.names()
         # stable node-type column order for the estimate matrix
         seen: dict[str, None] = {}
@@ -158,6 +247,20 @@ class OnlineExecutor:
         task_rows = {nm: i for i, nm in enumerate(estimator.task_names())}
         for tid, nm in task_name.items():
             self._row[tid] = task_rows[nm]
+
+    def _backoff(self, n_failures: int) -> float:
+        """Retry delay after the ``n_failures``-th failure of a task:
+        capped exponential, ``min(base * 2**(n-1), cap)``."""
+        return min(self.backoff_base * 2.0 ** (max(n_failures, 1) - 1),
+                   self.backoff_cap)
+
+    def _rel_factors(self) -> np.ndarray:
+        """(N,) per-node-instance reliability price multipliers (all-ones
+        when the estimator has no availability plane)."""
+        if hasattr(self.est, "reliability_factors"):
+            return np.asarray(self.est.reliability_factors(
+                self.node_names, self.rel_k), np.float64)
+        return np.ones(len(self.node_names), np.float64)
 
     # ---- planning ---------------------------------------------------------
     def _estimates(self, with_std: bool = True):
@@ -189,6 +292,15 @@ class OnlineExecutor:
         rows = np.array([self._row[tid] for tid in unstarted])
         cost = mean[rows][:, self._col]
         unc = std[rows][:, self._col] if self.risk_k > 0 else None
+        if self.rel_k is not None:
+            # availability pricing: each node-instance column is scaled
+            # by its expected time-to-success multiplier, so the same
+            # mean runtime on a flaky node costs more end to end (rank
+            # AND placement, like risk_k)
+            rf = self._rel_factors()
+            cost = cost * rf[None, :]
+            if unc is not None:
+                unc = unc * rf[None, :]
         task_ready = np.array([
             max((ext_finish.get(p, t_now)
                  for p in self.tasks[tid].pred if p not in idx),
@@ -208,49 +320,203 @@ class OnlineExecutor:
     # ---- the loop ---------------------------------------------------------
     def run(self) -> ExecutionTrace:
         trace = ExecutionTrace()
+        trace.total = len(self.tasks)
         done: dict[str, float] = {}
         expected_finish: dict[str, float] = {}
         started: set[str] = set()
-        heap: list[tuple[float, int, str, str]] = []
+        stranded: set[str] = set()         # abandoned tasks (strict=False)
+        # heap entries: (time, seq, kind, a, b).  "finish"/"fail" carry
+        # (task id, node) and their push seq doubles as the attempt id;
+        # "down"/"up" carry (node, None); "retry" carries (task id, None).
+        # Ordering is (time, seq), identical to the fault-free loop.
+        heap: list[tuple[float, int, str, str, str | None]] = []
         seq = 0
         t = 0.0
         cooldown = 0
+        attempt_no: dict[str, int] = {}    # attempts dispatched per task
+        fail_count: dict[str, int] = {}    # attempts lost per task
+        retry_at: dict[str, float] = {}    # backoff floor per task
+        dead_attempts: set[int] = set()    # attempt seqs killed by churn
+        if self.faults is not None:
+            for ev_t, ev_node, ev_kind in self.faults.node_events():
+                if ev_node in self.grid.nodes:
+                    heapq.heappush(heap, (float(ev_t), seq, ev_kind,
+                                          ev_node, None))
+                    seq += 1
         queues = self._plan(list(self.tasks), t, {})
         mean, std = self._estimates()
         rec_idx: dict[str, int] = {}            # task id -> trace.records slot
-        running: dict[str, list[tuple[str, float]]] = {}   # active attempts
+        # active attempts: tid -> [(node, event time, attempt seq, start)]
+        running: dict[str, list[tuple[str, float, int, float]]] = {}
         spec_run: dict[str, TaskRun] = {}       # pending copy's TaskRun
         speculated: set[str] = set()
 
-        def dispatch(t_now: float) -> bool:
+        def launch(tid: str, node: str, t_now: float) -> float:
+            """Draw the attempt's fate and book it: a successful attempt
+            finishes at start + dur; a doomed one (``faults`` decided)
+            dies at its deterministic failure fraction of the runtime.
+            Returns the attempt's true duration."""
             nonlocal seq
+            dur = float(self.runtime_fn(tid, node))
+            k = attempt_no.get(tid, 0)
+            attempt_no[tid] = k + 1
+            frac = (self.faults.attempt_outcome(tid, node, k)
+                    if self.faults is not None else None)
+            if frac is None:
+                end, kind = t_now + dur, "finish"
+            else:
+                end, kind = t_now + frac * dur, "fail"
+            self.grid.occupy(node, end)
+            heapq.heappush(heap, (end, seq, kind, tid, node))
+            running.setdefault(tid, []).append((node, end, seq, t_now))
+            seq += 1
+            return dur
+
+        def dispatch(t_now: float) -> bool:
             progressed = False
             for node in self.grid.idle(t_now):
                 q = queues[node]
-                pick = next((tid for tid in q
-                             if all(p in done
-                                    for p in self.tasks[tid].pred)), None)
+                pick = next(
+                    (tid for tid in q
+                     if all(p in done for p in self.tasks[tid].pred)
+                     and retry_at.get(tid, 0.0) <= t_now + 1e-12), None)
                 if pick is None:
                     continue
                 q.remove(pick)
                 started.add(pick)
-                dur = float(self.runtime_fn(pick, node))
-                end = t_now + dur
-                self.grid.occupy(node, end)
-                heapq.heappush(heap, (end, seq, pick, node))
-                seq += 1
-                running[pick] = [(node, end)]
+                dur = launch(pick, node, t_now)
                 r, c = self._row[pick], self._type_idx[
                     self.grid.type_of(node).name]
                 expected_finish[pick] = t_now + float(mean[r, c])
-                rec_idx[pick] = len(trace.records)
-                trace.records.append(TaskRun(
+                run_rec = TaskRun(
                     id=pick, name=self.task_name[pick], node=node,
                     node_type=self.grid.type_of(node).name,
-                    start=t_now, end=end, runtime=dur,
-                    pred_mean=float(mean[r, c]), pred_std=float(std[r, c])))
+                    start=t_now, end=t_now + dur, runtime=dur,
+                    pred_mean=float(mean[r, c]), pred_std=float(std[r, c]))
+                if pick in rec_idx:      # retry: replace the lost attempt
+                    trace.records[rec_idx[pick]] = run_rec
+                else:
+                    rec_idx[pick] = len(trace.records)
+                    trace.records.append(run_rec)
                 progressed = True
             return progressed
+
+        # ---- failure machinery (inert while faults is None) ----------
+        def record_censored(tid: str, node: str, start: float,
+                            t_now: float, reason: str) -> None:
+            """A lost attempt's elapsed time is a censored runtime
+            observation: a lower bound, never fed to the runtime
+            posterior — logged for the trace and counted against the
+            node's reliability posterior."""
+            trace.failures += 1
+            trace.censored.append(CensoredRun(
+                id=tid, name=self.task_name[tid], node=node,
+                node_type=self.grid.type_of(node).name,
+                start=start, lost_at=t_now, reason=reason))
+            if self._track_rel:
+                self.est.record_attempt(node, False)
+
+        def lose_attempt(tid: str, att_seq: int, t_now: float,
+                         reason: str) -> bool:
+            """Kill one live attempt; True when the task has no attempts
+            left and needs a retry (or stranding)."""
+            atts = running.get(tid, [])
+            entry = next((a for a in atts if a[2] == att_seq), None)
+            if entry is None:
+                return False
+            atts.remove(entry)
+            node = entry[0]
+            record_censored(tid, node, entry[3], t_now, reason)
+            sr = spec_run.get(tid)
+            if sr is not None and sr.node == node:
+                spec_run.pop(tid)        # the speculative copy itself died
+            if atts:
+                return False             # a twin attempt is still live
+            running.pop(tid, None)
+            started.discard(tid)         # back to the unstarted frontier
+            speculated.discard(tid)      # a retry may speculate again
+            return True
+
+        def schedule_retry(tid: str, node: str, t_now: float) -> None:
+            """Capped exponential backoff under the attempt budget, for a
+            task whose every live attempt has been lost."""
+            nonlocal seq
+            fail_count[tid] = fail_count.get(tid, 0) + 1
+            if attempt_no.get(tid, 0) >= self.max_attempts:
+                if self.strict:
+                    raise RuntimeError(
+                        f"task {tid!r} exhausted its attempt budget: "
+                        f"{attempt_no[tid]} attempts, {fail_count[tid]} "
+                        f"lost (last on {node!r} at t={t_now:.2f}) — "
+                        "raise max_attempts or fix the fault source")
+                stranded.add(tid)
+                return
+            delay = self._backoff(fail_count[tid])
+            retry_at[tid] = t_now + delay
+            heapq.heappush(heap, (t_now + delay, seq, "retry", tid, None))
+            seq += 1
+            trace.retries += 1
+            if not self.online:
+                # a static plan cannot re-plan: the retry goes back to
+                # its frozen node's queue if that node is still alive —
+                # otherwise the work is stranded with the node, which is
+                # exactly how static plans fail under churn
+                if self.grid.nodes[node].alive:
+                    queues[node].append(tid)
+                elif self.strict:
+                    raise RuntimeError(
+                        f"task {tid!r} was running on dead node {node!r} "
+                        "and the static plan (online=False) cannot "
+                        "re-assign it")
+                else:
+                    stranded.add(tid)
+
+        def replan_frontier(t_now: float) -> None:
+            """Re-plan the unstarted frontier (membership changed or a
+            retry re-entered it) with fresh availability floors."""
+            nonlocal queues
+            if not self.online:
+                return
+            unstarted = [x for x in self.tasks
+                         if x not in started and x not in done
+                         and x not in stranded]
+            if not unstarted:
+                return
+            ext = {**done, **{k: max(v, t_now)
+                              for k, v in expected_finish.items()
+                              if k not in done}}
+            queues = self._plan(unstarted, t_now, ext)
+            trace.replans += 1
+
+        def node_down(node: str, t_now: float) -> None:
+            """A crash or outage start: mask the node, kill its running
+            attempts (censored + retry), rescue orphaned queue entries
+            via a frontier re-plan."""
+            self.grid.fail(node, t_now)
+            trace.lost_nodes += 1
+            orphaned = bool(queues.get(node))
+            needs_retry = []
+            for tid, atts in list(running.items()):
+                for entry in [a for a in atts if a[0] == node]:
+                    dead_attempts.add(entry[2])
+                    if lose_attempt(tid, entry[2], t_now, "node"):
+                        needs_retry.append(tid)
+            for tid in needs_retry:
+                schedule_retry(tid, node, t_now)
+            if self.online and (orphaned or needs_retry):
+                replan_frontier(t_now)
+            elif not self.online and orphaned and self.strict:
+                raise RuntimeError(
+                    f"node {node!r} died at t={t_now:.2f} with "
+                    f"{len(queues[node])} queued tasks "
+                    f"({', '.join(queues[node][:6])}) and the static plan "
+                    "(online=False) cannot re-assign them")
+
+        def node_up(node: str, t_now: float) -> None:
+            """An outage ends: revive the node and re-plan so the
+            frontier can use the recovered capacity."""
+            self.grid.join(node, t_now)
+            replan_frontier(t_now)
 
         def speculate_stragglers(t_now: float) -> None:
             """Bias-coupled straggler mitigation: the surprise gate already
@@ -272,7 +538,6 @@ class OnlineExecutor:
                     return
             elif bias_point is None:
                 return
-            nonlocal seq
             for tid, attempts in list(running.items()):
                 if tid in done or tid in speculated or len(attempts) != 1:
                     continue
@@ -299,12 +564,8 @@ class OnlineExecutor:
                     r, self._type_idx[self.grid.type_of(n).name]]
                     + self.risk_k * std[
                         r, self._type_idx[self.grid.type_of(n).name]])
-                dur = float(self.runtime_fn(tid, alt))
+                dur = launch(tid, alt, t_now)
                 end = t_now + dur
-                self.grid.occupy(alt, end)
-                heapq.heappush(heap, (end, seq, tid, alt))
-                seq += 1
-                running[tid].append((alt, end))
                 speculated.add(tid)
                 c = self._type_idx[self.grid.type_of(alt).name]
                 spec_run[tid] = TaskRun(
@@ -316,26 +577,60 @@ class OnlineExecutor:
                                            t_now + float(mean[r, c]))
                 trace.speculations += 1
 
-        while len(done) < len(self.tasks):
+        while len(done) + len(stranded) < len(self.tasks):
             while dispatch(t):
                 pass
             if not heap:
-                missing = [tid for tid in self.tasks if tid not in done]
+                missing = sorted(tid for tid in self.tasks
+                                 if tid not in done and tid not in stranded)
+                if not self.strict:
+                    stranded.update(missing)
+                    break
+                details = []
+                for btid in missing[:8]:
+                    blockers = [p for p in self.tasks[btid].pred
+                                if p not in done]
+                    details.append(
+                        f"{btid} <- waiting on {', '.join(sorted(blockers))}"
+                        if blockers else
+                        f"{btid} (ready but not dispatchable — queued on a "
+                        "dead node, or no live nodes left?)")
+                more = (f"\n  ... and {len(missing) - 8} more"
+                        if len(missing) > 8 else "")
                 raise RuntimeError(
-                    f"execution stalled with {len(missing)} tasks blocked "
-                    "(cyclic dependencies or unassigned tasks?)")
-            end, _, tid, node = heapq.heappop(heap)
-            if tid in done:
+                    f"execution stalled with {len(missing)} tasks blocked:"
+                    "\n  " + "\n  ".join(details) + more)
+            end, ev_seq, kind, a, b = heapq.heappop(heap)
+            if kind == "retry":
+                t = max(t, end)          # backoff expired: just dispatch
+                continue
+            if kind == "down":
+                t = max(t, end)
+                if self.grid.nodes[a].alive:
+                    node_down(a, t)
+                continue
+            if kind == "up":
+                t = max(t, end)
+                node_up(a, t)
+                continue
+            tid, node = a, b
+            if tid in done or ev_seq in dead_attempts:
                 continue                 # stale event of a killed attempt
             t = end
+            if kind == "fail":
+                if lose_attempt(tid, ev_seq, t, "attempt"):
+                    schedule_retry(tid, node, t)
+                    replan_frontier(t)
+                continue
             # batch every completion landing on this tick: multi-node
             # observations arriving together are absorbed by ONE scanned
             # estimator update instead of per-observation calls
             completions = [(tid, node, end)]
             seen = {tid}
-            while heap and heap[0][0] <= t + 1e-12:
-                e2, _, tid2, node2 = heapq.heappop(heap)
-                if tid2 in done or tid2 in seen:
+            while (heap and heap[0][0] <= t + 1e-12
+                   and heap[0][2] == "finish"):
+                e2, s2, _, tid2, node2 = heapq.heappop(heap)
+                if tid2 in done or tid2 in seen or s2 in dead_attempts:
                     continue             # stale, or a same-tick lost twin
                 completions.append((tid2, node2, e2))
                 seen.add(tid2)
@@ -344,14 +639,19 @@ class OnlineExecutor:
                 # resolve the speculative race: kill the other attempts,
                 # free their nodes NOW, and let the winning run's record
                 # stand (predictions are the dispatch-time belief of the
-                # attempt that actually finished)
-                for n2, e2 in running.pop(ctid, []):
+                # attempt that actually finished).  A scheduler-ordered
+                # kill is NOT a node failure: it never touches the
+                # reliability posterior.
+                for n2, e2, s2, _ in running.pop(ctid, []):
                     if n2 != cnode:
                         self.grid.release(n2, cend)
+                        dead_attempts.add(s2)
                 sr = spec_run.pop(ctid, None)
                 if sr is not None and sr.node == cnode:
                     trace.records[rec_idx[ctid]] = sr
                     trace.spec_wins += 1
+                if self._track_rel:
+                    self.est.record_attempt(cnode, True)
             cooldown = max(0, cooldown - len(completions))
             if self.online:
                 # surprise gates BEFORE the update: was each realised
@@ -375,7 +675,8 @@ class OnlineExecutor:
                 mean, std = self._estimates()     # dirty-row refresh only
                 trace.surprises += sum(gates)
                 unstarted = [x for x in self.tasks
-                             if x not in started and x not in done]
+                             if x not in started and x not in done
+                             and x not in stranded]
                 if any(gates) and unstarted and cooldown == 0:
                     ext = {**done, **{k: max(v, t)
                                       for k, v in expected_finish.items()
@@ -386,6 +687,12 @@ class OnlineExecutor:
                 if self.speculate:
                     speculate_stragglers(t)
         trace.makespan = max(done.values()) if done else 0.0
+        trace.completed = len(done)
+        trace.stranded = len(stranded)
+        if stranded:
+            # placeholder records of attempts that never completed would
+            # read as finished runs — keep only what actually ran to end
+            trace.records = [r for r in trace.records if r.id in done]
         return trace
 
 

@@ -2,14 +2,14 @@ from .heft import (SchedTask, detect_stragglers, heft_schedule,
                    heft_schedule_array, heft_schedule_reference,
                    reschedule_elastic, round_robin_schedule,
                    simulate_with_stragglers, upward_rank_array)
-from .simulator import (ClusterSimulator, EventSimulator, GridEngine,
-                        SimNode, load_dryrun_cells)
+from .simulator import (ClusterSimulator, EventSimulator, FaultInjector,
+                        GridEngine, SimNode, load_dryrun_cells)
 from .workflows import INPUTS, WORKFLOWS, TaskDef, all_experiments
 
 __all__ = ["SchedTask", "detect_stragglers", "heft_schedule",
            "heft_schedule_array", "heft_schedule_reference",
            "reschedule_elastic", "round_robin_schedule",
            "simulate_with_stragglers", "upward_rank_array",
-           "ClusterSimulator", "EventSimulator", "GridEngine",
-           "SimNode", "load_dryrun_cells", "INPUTS", "WORKFLOWS", "TaskDef",
-           "all_experiments"]
+           "ClusterSimulator", "EventSimulator", "FaultInjector",
+           "GridEngine", "SimNode", "load_dryrun_cells", "INPUTS",
+           "WORKFLOWS", "TaskDef", "all_experiments"]

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import heapq
 import json
+import warnings
 from dataclasses import dataclass, field
 from pathlib import Path
 
@@ -122,6 +123,86 @@ class ClusterSimulator:
 
 
 # ---------------------------------------------------------------------------
+# Fault process (node crashes, transient outages, attempt failures)
+# ---------------------------------------------------------------------------
+class FaultInjector:
+    """Deterministic, seeded fault process for the online execution loop.
+
+    Three failure modes, mirroring real grid-engine churn:
+
+    * **permanent crashes** — ``crash_at[node] = t``: the node dies at
+      ``t`` and never returns; running attempts there are lost.
+    * **transient outages** — ``outages[node] = (down, up)``: the node is
+      lost at ``down`` (running attempts killed) and rejoins at ``up``.
+    * **attempt failures** — each (task, node) pair carries a fixed
+      failure probability derived from a stable hash, exactly like the
+      cluster's hidden ``het``/``systematic`` pair properties:
+      ``p = min(1, p_fail * (1 + p_spread * u))`` with ``u`` uniform in
+      [0, 1) per pair.  Whether attempt ``k`` of a task on a node fails —
+      and at what fraction of its runtime the failure manifests — is a
+      deterministic function of (task, node, attempt, seed), so the same
+      scenario replays bit-identically.
+
+    The injector only *describes* faults; the ``OnlineExecutor`` applies
+    them (``faults=None`` there keeps the fault-free loop bit-exact).
+    """
+
+    def __init__(self, *, crash_at: dict[str, float] | None = None,
+                 outages: dict[str, tuple[float, float]] | None = None,
+                 p_fail: float = 0.0, p_spread: float = 1.0, seed: int = 0):
+        if not 0.0 <= p_fail <= 1.0:
+            raise ValueError(f"p_fail must be in [0, 1], got {p_fail}")
+        self.crash_at = {str(k): float(v)
+                         for k, v in (crash_at or {}).items()}
+        self.outages = {str(k): (float(v[0]), float(v[1]))
+                        for k, v in (outages or {}).items()}
+        for node, (down, up) in self.outages.items():
+            if up <= down:
+                raise ValueError(f"outage on {node!r}: up {up} <= down "
+                                 f"{down}")
+        self.p_fail = float(p_fail)
+        self.p_spread = float(p_spread)
+        self.seed = int(seed)
+
+    def _rng(self, *parts) -> np.random.Generator:
+        """Stable-hash generator (crc32, like ``ClusterSimulator._pair_rng``
+        — stable across processes): fault properties are fixed facts of
+        the scenario, not draws from a shared stream."""
+        import zlib
+        key = "|".join(str(p) for p in parts) + f"|{self.seed}"
+        return np.random.default_rng(zlib.crc32(key.encode()) % (2 ** 31))
+
+    def node_events(self) -> list[tuple[float, str, str]]:
+        """Time-sorted membership events: ``(time, node, 'down'|'up')``."""
+        evs = [(t, n, "down") for n, t in self.crash_at.items()]
+        for n, (down, up) in self.outages.items():
+            evs.append((down, n, "down"))
+            evs.append((up, n, "up"))
+        return sorted(evs)
+
+    def attempt_fail_prob(self, task_id: str, node: str) -> float:
+        """The pair's fixed per-attempt failure probability."""
+        if self.p_fail <= 0.0:
+            return 0.0
+        u = float(self._rng("p", task_id, node).random())
+        return min(1.0, self.p_fail * (1.0 + self.p_spread * u))
+
+    def attempt_outcome(self, task_id: str, node: str,
+                        attempt: int) -> float | None:
+        """``None`` if attempt ``attempt`` of ``task_id`` on ``node``
+        succeeds; otherwise the fraction of the attempt's runtime at
+        which the failure manifests (in (0, 1) — the elapsed time up to
+        it is a *censored* lower bound on the true runtime)."""
+        p = self.attempt_fail_prob(task_id, node)
+        if p <= 0.0:
+            return None
+        g = self._rng("draw", task_id, node, attempt)
+        if float(g.random()) >= p:
+            return None
+        return float(g.uniform(0.05, 0.95))
+
+
+# ---------------------------------------------------------------------------
 # Discrete-event engine (scheduler benchmarks, straggler/failure injection)
 # ---------------------------------------------------------------------------
 @dataclass(order=True)
@@ -183,9 +264,37 @@ class GridEngine:
 
     def ready_vector(self, t: float) -> np.ndarray:
         """(N,) earliest availability per node (``names()`` order) — the
-        ``node_ready`` floor for a mid-execution HEFT re-plan."""
-        return np.array([max(sn.busy_until, t)
+        ``node_ready`` floor for a mid-execution HEFT re-plan.  Dead
+        nodes are masked with ``+inf``: their EFT is infinite, so a
+        re-plan can never place frontier work there (``idle`` filters
+        them for dispatch; this is the planning-side twin)."""
+        return np.array([max(sn.busy_until, t) if sn.alive else np.inf
                          for sn in self.nodes.values()])
+
+    # ---- elastic membership -----------------------------------------------
+    def fail(self, name: str, at: float) -> None:
+        """The node dies (crash or outage start) at ``at``: it stops
+        accepting work (``idle``/``ready_vector`` mask it) and anything
+        booked on it is void — the caller is responsible for re-queueing
+        the killed attempts."""
+        sn = self.nodes[name]
+        sn.alive = False
+        sn.busy_until = float(at)
+
+    def join(self, node: "SimNode | str", at: float = 0.0) -> None:
+        """A node (re-)joins at ``at``: an existing name is revived (an
+        outage ending), a new ``SimNode`` is registered (cluster grows).
+        Consumers that pinned the node universe at construction (e.g. a
+        running ``OnlineExecutor``) only see revivals; genuinely new
+        nodes are picked up by executors built afterwards."""
+        if isinstance(node, SimNode):
+            node.alive = True
+            node.busy_until = max(node.busy_until, float(at))
+            self.nodes[node.name] = node
+            return
+        sn = self.nodes[node]
+        sn.alive = True
+        sn.busy_until = max(sn.busy_until, float(at))
 
 
 class EventSimulator:
@@ -202,11 +311,24 @@ class EventSimulator:
                      assignment: dict[str, str],
                      runtime_fn=None,
                      fail_at: dict[str, float] | None = None,
-                     reassign_fn=None) -> dict:
+                     reassign_fn=None,
+                     on_incomplete: str = "raise") -> dict:
         """tasks: [{id, task(TaskDef), size}]; deps: id -> prereq ids;
         assignment: id -> node name.  runtime_fn overrides the ground truth.
         ``fail_at``: node -> time (node dies; queued work is re-assigned via
-        ``reassign_fn(task_id, dead_node) -> node``)."""
+        ``reassign_fn(task_id, dead_node) -> node``).
+
+        When the schedule cannot complete — a dependency deadlock, or a
+        failed node's work with no ``reassign_fn`` — the result would
+        silently truncate ``records``; ``on_incomplete`` controls the
+        signal: ``"raise"`` (default) raises ``RuntimeError`` naming the
+        stranded task ids, ``"warn"`` emits a ``RuntimeWarning`` and
+        returns the partial result, ``"ignore"`` returns it silently
+        (the pre-fix behaviour; ``completed < total`` is then the only
+        indicator)."""
+        if on_incomplete not in ("raise", "warn", "ignore"):
+            raise ValueError(f"on_incomplete must be 'raise', 'warn' or "
+                             f"'ignore', got {on_incomplete!r}")
         fail_at = dict(fail_at or {})
         by_id = {t["id"]: t for t in tasks}
         done: dict[str, float] = {}
@@ -251,6 +373,19 @@ class EventSimulator:
                 progressed = True
             if not progressed:
                 break
+        if remaining and on_incomplete != "ignore":
+            stranded = sorted(remaining)
+            shown = ", ".join(stranded[:8]) + \
+                (", ..." if len(stranded) > 8 else "")
+            on_dead = sorted(t for t in remaining
+                             if not self.nodes[assignment[t]].alive)
+            why = (f"{len(on_dead)} assigned to failed nodes with no "
+                   f"reassign_fn" if on_dead else "dependency deadlock")
+            msg = (f"run_schedule incomplete: {len(stranded)} of "
+                   f"{len(by_id)} tasks stranded ({shown}) — {why}")
+            if on_incomplete == "raise":
+                raise RuntimeError(msg)
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
         makespan = max((r["end"] for r in records), default=0.0)
         return {"records": records, "makespan": makespan,
                 "completed": len(records), "total": len(by_id)}

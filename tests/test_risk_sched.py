@@ -7,7 +7,7 @@ import json
 import numpy as np
 import pytest
 
-from repro.core import BiasModel, LotaruEstimator
+from repro.core import BiasModel, LotaruEstimator, SCHEMA_VERSION
 from repro.core.nodes import get_node
 from repro.core.profiler import BenchResult
 from repro.online import OnlineExecutor, fanout_chain_dag
@@ -362,7 +362,7 @@ def test_save_load_roundtrips_bias_hyperparams(tmp_path):
     p = tmp_path / "est.json"
     est.save(p)
     d = json.loads(p.read_text())
-    assert d["version"] == 4
+    assert d["version"] == SCHEMA_VERSION
     assert d["bias_opts"] == {"decay": 0.95, "sigma_r": 0.1,
                               "empirical_bayes": True}
     loaded = LotaruEstimator.load(p)
