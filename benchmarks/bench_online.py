@@ -46,11 +46,21 @@ import numpy as np
 
 from repro.core import LotaruEstimator, blr, get_node, profile_cluster, \
     profile_node, target_nodes
+from repro.obs import (EventLog, calibration_summary, observe_records,
+                       tick_latency_summary)
 from repro.online import OnlineExecutor, fanout_chain_dag
 from repro.sched.simulator import ClusterSimulator, FaultInjector, GridEngine
 from repro.sched.workflows import INPUTS, WORKFLOWS
 
 OUT = Path(__file__).resolve().parents[1] / "BENCH_online.json"
+TRACES = Path(__file__).resolve().parents[1] / "traces"
+
+#: calibration gate inputs: coverage of the 90% predictive interval must
+#: land in CAL_BAND once CAL_MIN_OBS observations have streamed in (the
+#: warm-up reflects the near-prior posterior, not the online estimator)
+CAL_MIN_OBS = 20
+CAL_BAND = (0.80, 0.98)
+Z90 = 1.6448536269514722     # Phi^-1(0.95): the 90% two-sided z quantile
 
 
 def _synthetic_samples(n_tasks: int, n_samples: int = 8, seed: int = 0):
@@ -159,13 +169,42 @@ RISK_K = 1.0        # risk-aware arm: effective cost = mean + RISK_K * sigma
 SPEC_TAIL = 0.8     # tail-mass admission: P(bias > drift) >= 0.8
 
 
+def _calibration(events) -> dict:
+    """Per-workflow calibration record for the gate: both coverage forms
+    of the 90% predictive interval, post-warm-up.  ``coverage90`` scores
+    the executor's own t-intervals (the surprise-gate bounds);
+    ``coverage90_z`` scores ``pred_mean ± Z90 * pred_std`` — the Gaussian
+    interval implied by the σ that ``risk_k`` pricing and tail-mass
+    speculation actually consume, which is what the gate checks."""
+    cal = calibration_summary(events, min_obs=CAL_MIN_OBS)
+    recs = observe_records(events)[CAL_MIN_OBS:]
+    if recs:
+        cov_z = float(np.mean([
+            abs(r["runtime"] - r["pred_mean"]) <= Z90 * r["pred_std"]
+            for r in recs]))
+    else:
+        cov_z = float("nan")
+    return {"n_obs": cal["n_obs"], "min_obs": CAL_MIN_OBS,
+            "coverage90": cal["coverage"], "coverage90_z": cov_z,
+            "coverage90_all": cal["coverage_all"],
+            "sharpness_rel": cal["sharpness_rel"],
+            "pit_tv": cal["pit_tv"]}
+
+
+def _in_band(r: dict) -> bool:
+    return (r["calibration_n_obs"] >= CAL_MIN_OBS
+            and CAL_BAND[0] <= r["coverage90_z"] <= CAL_BAND[1])
+
+
 def bench_workflows(n_samples: int = 8, nodes_per_type: int = 2,
-                    seed: int = 0):
+                    seed: int = 0, trace_dir: Path | None = TRACES):
     local = get_node("local-cpu")
     local_bench = profile_node(local, np.random.default_rng(seed + 7))
     tbenches = profile_cluster(target_nodes(), seed=seed + 13)
     truth = ClusterSimulator(seed=seed + 2000)
     results = {}
+    observability: dict = {}
+    overhead = None
     for wf in WORKFLOWS:
         size = INPUTS[(wf, 1)]
         by_name = {t.name: t for t in WORKFLOWS[wf]}
@@ -177,7 +216,7 @@ def bench_workflows(n_samples: int = 8, nodes_per_type: int = 2,
                      for tid in tasks for nt in target_nodes()}
 
         def make_executor(online: bool, bias_correction: bool = True,
-                          risk: bool = False):
+                          risk: bool = False, tracer=None):
             sim = ClusterSimulator(seed=seed)     # same local runs each time
             est = LotaruEstimator(local_bench, tbenches,
                                   bias_correction=bias_correction,
@@ -191,7 +230,7 @@ def bench_workflows(n_samples: int = 8, nodes_per_type: int = 2,
                 lambda tid, node: truth_tab[(tid, grid.type_of(node).name)],
                 online=online, confidence=0.9,
                 risk_k=RISK_K if risk else 0.0,
-                spec_tail=SPEC_TAIL if risk else None)
+                spec_tail=SPEC_TAIL if risk else None, tracer=tracer)
 
         # clear the jit cache between arms: every arm compiles its own
         # spread of XLA executables (one scan per distinct tick batch
@@ -202,9 +241,35 @@ def bench_workflows(n_samples: int = 8, nodes_per_type: int = 2,
         jax.clear_caches()
         nobias = make_executor(online=True, bias_correction=False).run()
         jax.clear_caches()
-        online = make_executor(online=True).run()
+        if overhead is None:
+            # tracing overhead, measured once: the same online arm with
+            # no tracer attached, timed cold (fresh jit cache) like the
+            # traced run below — the delta is what the EventLog costs
+            t0 = time.perf_counter()
+            make_executor(online=True).run()
+            wall_plain = time.perf_counter() - t0
+            jax.clear_caches()
+        log = EventLog()
+        t0 = time.perf_counter()
+        online = make_executor(online=True, tracer=log).run()
+        wall_traced = time.perf_counter() - t0
+        if overhead is None:
+            overhead = {"workflow": wf, "wall_untraced_s": wall_plain,
+                        "wall_traced_s": wall_traced,
+                        "overhead_frac": wall_traced / wall_plain - 1.0,
+                        "n_events": len(log.events),
+                        "per_event_us": (wall_traced - wall_plain)
+                        / max(len(log.events), 1) * 1e6}
         jax.clear_caches()
         risk = make_executor(online=True, risk=True).run()
+        if trace_dir is not None:
+            trace_dir.mkdir(parents=True, exist_ok=True)
+            log.to_jsonl(trace_dir / f"{wf}.jsonl")
+            log.to_chrome(trace_dir / f"{wf}.chrome.json")
+        cal = _calibration(log.events)
+        lat = tick_latency_summary(log.events)
+        observability[wf] = {"n_events": len(log.events),
+                             "tick_latency": lat}
         traj_s = static.cumulative_mpe()
         traj_o = online.cumulative_mpe()
         results[wf] = {
@@ -228,6 +293,10 @@ def bench_workflows(n_samples: int = 8, nodes_per_type: int = 2,
             "risk_replans": risk.replans,
             "risk_speculations": risk.speculations,
             "risk_spec_wins": risk.spec_wins,
+            "calibration_n_obs": cal["n_obs"],
+            "coverage90": cal["coverage90"],
+            "coverage90_z": cal["coverage90_z"],
+            "calibration": cal,
         }
         # every workflow/arm combination compiles its own set of XLA
         # executables (frontier sizes vary per re-plan); left to
@@ -245,13 +314,20 @@ def bench_workflows(n_samples: int = 8, nodes_per_type: int = 2,
     risk_makespan_wins = sum(
         1 for r in results.values()
         if r["makespan_online_risk"] <= r["makespan_online"] * (1 + 1e-9))
+    calibration_in_band = sum(1 for r in results.values() if _in_band(r))
     return {"workflows": results, "n_samples": n_samples,
             "nodes_per_type": nodes_per_type,
             "risk_k": RISK_K, "spec_tail": SPEC_TAIL,
             "online_mpe_wins": wins, "bias_mpe_wins": bias_wins,
             "online_makespan_wins": makespan_wins,
             "risk_makespan_wins": risk_makespan_wins,
-            "n_workflows": len(results)}
+            "calibration_in_band": calibration_in_band,
+            "cal_min_obs": CAL_MIN_OBS, "cal_band": list(CAL_BAND),
+            "n_workflows": len(results),
+            "observability": {"per_workflow": observability,
+                              "overhead": overhead,
+                              "trace_dir": (str(trace_dir)
+                                            if trace_dir else None)}}
 
 
 FAULT_P = 0.05           # base per-attempt failure probability
@@ -376,6 +452,18 @@ def run(n_tasks: int = 1000, n_samples: int = 8,
           f"bias-vs-PR2 wins: {wf['bias_mpe_wins']}/{wf['n_workflows']}  "
           f"risk makespan win-or-tie: "
           f"{wf['risk_makespan_wins']}/{wf['n_workflows']}")
+    for name, r in wf["workflows"].items():
+        c = r["calibration"]
+        print(f"  {name:10s} calibration: coverage90 t={c['coverage90']:.3f}"
+              f" z={c['coverage90_z']:.3f} (n={c['n_obs']}, "
+              f"warm-up {c['min_obs']})  sharpness_rel="
+              f"{c['sharpness_rel']:.2f}  pit_tv={c['pit_tv']:.2f}")
+    ov = wf["observability"]["overhead"]
+    print(f"calibration in band {wf['cal_band']}: "
+          f"{wf['calibration_in_band']}/{wf['n_workflows']}  tracing "
+          f"overhead ({ov['workflow']}): {ov['overhead_frac']:+.1%} "
+          f"({ov['n_events']} events, {ov['per_event_us']:.1f}us/event)"
+          if ov else "calibration: no overhead sample (tracing off?)")
     for name, r in fl["workflows"].items():
         print(f"  {name:10s} faults: FT {r['ft_completed_fraction']:.0%} "
               f"complete @ {r['inflation']:.2f}x makespan "
@@ -398,6 +486,8 @@ def run(n_tasks: int = 1000, n_samples: int = 8,
              f"{wf['bias_mpe_wins']}/{wf['n_workflows']}"),
             ("bench_online.risk_makespan_wins", 0.0,
              f"{wf['risk_makespan_wins']}/{wf['n_workflows']}"),
+            ("bench_online.calibration_in_band", 0.0,
+             f"{wf['calibration_in_band']}/{wf['n_workflows']}"),
             ("bench_online.fault_completion", 0.0,
              f"{fl['ft_complete']}/{fl['n_workflows']};"
              f"inflation={fl['max_inflation']:.2f}x")]

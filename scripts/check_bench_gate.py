@@ -15,7 +15,11 @@ useless when bisecting which workflow moved):
   failures) the fault-tolerant arm must complete 100% of EVERY workflow
   with makespan inflation within the committed bound, and the static
   baseline must strand work somewhere (otherwise the scenario has gone
-  soft and proves nothing) — PR 5 invariant.
+  soft and proves nothing) — PR 5 invariant;
+* the predictive intervals must be *calibrated*: post-warm-up empirical
+  coverage of the 90% interval implied by the risk-pricing σ in
+  [0.80, 0.98] on >= 4/5 workflows (PR 6 invariant — both over- and
+  under-coverage corrupt risk_k pricing and speculation admission).
 """
 import json
 import sys
@@ -39,6 +43,17 @@ GATES = {
         lambda r: r["makespan_online_risk"]
         <= r["makespan_online"] * (1 + 1e-9), 0.6,
         "risk_makespan_wins"),
+    # PR 6 invariant: once >= 20 observations have streamed in, the
+    # empirical coverage of the 90% predictive interval implied by the
+    # sigma that risk_k pricing consumes (mean ± 1.645σ) must land in
+    # [0.80, 0.98] on >= 4 of the 5 workflows — a σ nobody checks is a σ
+    # nobody should price risk with.  The upper bound matters as much as
+    # the lower: overcoverage means the intervals are too wide and the
+    # risk premium is systematically overpaid.
+    "calibration: 90% interval coverage in band": (
+        lambda r: r["calibration_n_obs"] >= 20
+        and 0.80 <= r["coverage90_z"] <= 0.98, 0.8,
+        "calibration_in_band"),
 }
 
 
@@ -89,7 +104,10 @@ def main() -> int:
                 f"bias={r['mpe_online']:.3f} "
                 f"risk={r['mpe_online_risk']:.3f} | makespan "
                 f"bias={r['makespan_online']:.0f} "
-                f"risk={r['makespan_online_risk']:.0f}")
+                f"risk={r['makespan_online_risk']:.0f} | "
+                f"coverage90 z={r.get('coverage90_z', float('nan')):.3f} "
+                f"t={r.get('coverage90', float('nan')):.3f} "
+                f"(n={r.get('calibration_n_obs', 0)})")
 
     for name, (pred, frac, summary_key) in GATES.items():
         ok &= _check(name, pred, frac, summary_key, e["workflows"], e,

@@ -1,0 +1,52 @@
+"""Render a structured execution trace (JSONL, written by ``EventLog``)
+as a human-readable report: event counters, predictive-interval
+calibration (coverage / PIT / sharpness), per-phase tick-latency
+breakdown with the first-call XLA compile split out, and the
+fault/retry narrative.
+
+Usage::
+
+    python scripts/report_trace.py traces/chipseq.jsonl
+    python scripts/report_trace.py traces/*.jsonl --json report.json
+
+With ``--json`` the machine-readable ``report_dict`` of every trace is
+additionally written to the given path (keyed by trace filename) — the
+artifact CI uploads next to the JSONL traces.
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.obs import load_jsonl, render_report, report_dict  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("traces", nargs="+", type=Path,
+                    help="EventLog JSONL trace file(s)")
+    ap.add_argument("--json", type=Path, default=None,
+                    help="also write machine-readable report_dict(s) here")
+    ap.add_argument("--min-obs", type=int, default=20,
+                    help="calibration warm-up: observations excluded "
+                         "before coverage/PIT are scored (default 20)")
+    args = ap.parse_args(argv)
+
+    reports = {}
+    for path in args.traces:
+        events = load_jsonl(path)
+        if len(args.traces) > 1:
+            print(f"\n### {path} " + "#" * max(0, 58 - len(str(path))))
+        print(render_report(events, min_obs=args.min_obs))
+        reports[path.name] = report_dict(events, min_obs=args.min_obs)
+
+    if args.json is not None:
+        args.json.write_text(json.dumps(reports, indent=2, default=float))
+        print(f"\nwrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -198,6 +198,28 @@ def predict_interval(post: BLRPosterior, x_star, confidence: float = 0.5):
     return lo, hi
 
 
+def predict_cdf(post: BLRPosterior, x_star, y) -> float:
+    """CDF of the posterior predictive at ``y`` — the probability the
+    predictive Student-t at input ``x_star`` assigns to runtimes ≤ ``y``.
+
+    This is the PIT (probability integral transform) primitive the
+    calibration diagnostics consume: if the predictive distribution is
+    calibrated, ``predict_cdf(post, x, y_observed)`` over a stream of
+    realised runtimes is uniform on [0, 1].  Uses the exact same location
+    / scale / dof as ``predict_interval`` (scalar path), so interval
+    coverage and PIT agree by construction: ``lo <= y <= hi`` at
+    confidence c  ⇔  PIT in [0.5 - c/2, 0.5 + c/2].
+    """
+    mean, _ = predict(post, x_star)
+    X = _design(jnp.asarray(x_star, post.mu.dtype), post.x_scale)
+    quad = jnp.einsum("...i,ij,...j->...", X, post.V, X)
+    scale = float(np.asarray(jnp.sqrt((post.b / post.a) * (1.0 + quad)))
+                  .reshape(-1)[0]) * float(np.asarray(post.y_scale))
+    z = (float(y) - float(np.asarray(mean).reshape(-1)[0])) \
+        / max(scale, 1e-300)
+    return float(_scipy_stats.t.cdf(z, df=float(np.asarray(post.dof))))
+
+
 def pearson(x, y) -> float:
     """Pearson correlation coefficient (paper eq. 1)."""
     x = np.asarray(x, np.float64)

@@ -24,10 +24,12 @@ import numpy as np
 
 from scipy import stats as _scipy_stats
 
+from repro.obs.trace import NULL_TRACER
+
 from .adjust import (cpu_weight, deviation, roofline_weights, runtime_factor,
                      runtime_factor3, stack_benches)
 from .blr import (BatchedTaskModel, BiasModel, ReliabilityModel, TaskModel,
-                  fit_task, fit_task_batch, predict_interval,
+                  fit_task, fit_task_batch, predict_cdf, predict_interval,
                   predict_task_batch, slice_task_model, stack_task_models,
                   unstack_task_models, update_task_batch_stream)
 from .downsample import partition_sizes
@@ -89,6 +91,10 @@ class _BiasLayer:
         are bit-exact with the hyperparameter-free layer."""
         self.bias_correction = bias_correction
         self.bias: BiasModel | None = None
+        # observability: spans around the jitted matrix dispatch and the
+        # update/bias scatters go through this tracer (NULL_TRACER = the
+        # zero-cost disabled path; set_tracer attaches a live EventLog)
+        self._tracer = NULL_TRACER
         # per-node attempt-reliability posterior (lazily created on the
         # first recorded attempt, like the bias state): keyed by node
         # *instance* name, since availability is a property of the
@@ -103,6 +109,13 @@ class _BiasLayer:
 
     def _bias_rows(self) -> dict:
         raise NotImplementedError
+
+    def set_tracer(self, tracer) -> None:
+        """Attach a ``repro.obs`` tracer: the estimator's jitted
+        ``predict_matrix`` dispatches and its update/bias scatters emit
+        wall-clock spans through it.  Tracing is read-only — it never
+        changes a prediction (``None`` restores the no-op tracer)."""
+        self._tracer = tracer if tracer is not None else NULL_TRACER
 
     def _row_of(self, name: str) -> int:
         """Row index of a task/cell — cached: the executor hits this per
@@ -426,20 +439,25 @@ class LotaruEstimator(_BiasLayer):
                 idx = np.asarray(rows)
                 sub = jax.tree_util.tree_map(lambda a: a[idx], model)
                 sz = size if np.ndim(size) == 0 else np.asarray(size)[idx]
-                mean_r, std_r = _scaled_matrix_core(
-                    sub, jnp.asarray(c["F"][idx], dt), jnp.asarray(sz, dt))
-                c["mean"][idx] = np.asarray(mean_r, np.float64)
-                c["std"][idx] = np.asarray(std_r, np.float64)
+                with self._tracer.span("predict_matrix", rows=len(rows),
+                                       mode="dirty"):
+                    mean_r, std_r = _scaled_matrix_core(
+                        sub, jnp.asarray(c["F"][idx], dt),
+                        jnp.asarray(sz, dt))
+                    c["mean"][idx] = np.asarray(mean_r, np.float64)
+                    c["std"][idx] = np.asarray(std_r, np.float64)
                 self._dirty_rows.clear()
             return self._bias_fold(nodes, c["mean"], c["std"], with_std)
         F = self.factor_matrix(nodes)
-        mean, std = _scaled_matrix_core(model, jnp.asarray(F, dt),
-                                        jnp.asarray(size, dt))
-        # np.array (not asarray): jax arrays view as read-only buffers and
-        # the cache must stay patchable row-by-row
+        with self._tracer.span("predict_matrix", rows=len(self.tasks),
+                               mode="full"):
+            mean, std = _scaled_matrix_core(model, jnp.asarray(F, dt),
+                                            jnp.asarray(size, dt))
+            mean, std = np.array(mean, np.float64), np.array(std, np.float64)
+        # np.array (not asarray) above: jax arrays view as read-only
+        # buffers and the cache must stay patchable row-by-row
         self._mat_cache = {"key": key, "model": model, "F": F,
-                           "mean": np.array(mean, np.float64),
-                           "std": np.array(std, np.float64)}
+                           "mean": mean, "std": std}
         self._dirty_rows.clear()
         return self._bias_fold(nodes, self._mat_cache["mean"],
                                self._mat_cache["std"], with_std)
@@ -497,7 +515,8 @@ class LotaruEstimator(_BiasLayer):
             xs[k] = size
             ys[k] = runtime / (f * max(b, 1e-12))
             factors[k] = f
-        new_model = update_task_batch_stream(model, idx, xs, ys)
+        with self._tracer.span("update_stream", n=len(obs)):
+            new_model = update_task_batch_stream(model, idx, xs, ys)
         affected = []
         for k, (task, _, _, _) in enumerate(obs):
             ft = self.tasks[task]
@@ -530,7 +549,8 @@ class LotaruEstimator(_BiasLayer):
                     cols.append(self._bias_col[node])
                     lrs.append(np.log(runtime / scaled))
             if rows:
-                bias.update(rows, cols, lrs)
+                with self._tracer.span("bias_update", n=len(rows)):
+                    bias.update(rows, cols, lrs)
         c = self._batch_cache
         self._batch_cache = (c[0], c[1], new_model, c[3])
         if self._mat_cache is not None and self._mat_cache["model"] is model:
@@ -568,6 +588,32 @@ class LotaruEstimator(_BiasLayer):
                 s_lo, s_hi = bias.interval_scale(self._row_of(task_name),
                                                  j, z)
         return max(lo * f * s_lo, 0.0), hi * f * s_hi
+
+    def predict_pit_node(self, task_name: str, node: str, size: float,
+                         runtime: float) -> float:
+        """Probability integral transform of a realised runtime under the
+        predictive distribution on ``node``: ``F(runtime)`` with the same
+        location/scale/dof family as ``predict_interval_node`` — the
+        Student-t predictive for correlated tasks, the normal
+        median/spread envelope for the fallback, shifted by the factor
+        and the bias *point* estimate (the bias posterior's own widening
+        is deliberately not folded in: PIT judges the core predictive
+        σ the scheduler prices with).  A calibrated stream of PITs is
+        uniform on [0, 1]; ``repro.obs.calibration`` histograms them.
+        Read-only: never creates bias state or touches any cache the
+        predictions depend on."""
+        ft = self.tasks[task_name]
+        f = max(float(self.factor(task_name, node)), 1e-12)
+        b = 1.0
+        if self.bias_correction and self.bias is not None:
+            j = self._bias_col.get(node)
+            if j is not None:
+                b = self.bias.point(self._row_of(task_name), j)
+        y_local = float(runtime) / (f * max(b, 1e-12))
+        if ft.model.correlated:
+            return predict_cdf(ft.model.post, size, y_local)
+        z = (y_local - ft.model.median) / max(ft.model.spread, 1e-300)
+        return float(_scipy_stats.norm.cdf(z))
 
     # ---- offline reuse (paper §1: "allows for offline scenarios where the
     # learned models are reused for future executions") -----------------
@@ -913,13 +959,17 @@ class LotaruML(_BiasLayer):
             rows = sorted(self._dirty_rows)
             if rows:
                 idx = np.asarray(rows)
-                mean_r, std_r = self._matrix_rows(model, arr, toks, nodes,
-                                                  row_idx=idx)
-                c["mean"][idx] = mean_r
-                c["std"][idx] = std_r
+                with self._tracer.span("predict_matrix", rows=len(rows),
+                                       mode="dirty"):
+                    mean_r, std_r = self._matrix_rows(model, arr, toks,
+                                                      nodes, row_idx=idx)
+                    c["mean"][idx] = mean_r
+                    c["std"][idx] = std_r
                 self._dirty_rows.clear()
             return self._bias_fold(nodes, c["mean"], c["std"], with_std)
-        mean, std = self._matrix_rows(model, arr, toks, nodes)
+        with self._tracer.span("predict_matrix", rows=len(self.cells),
+                               mode="full"):
+            mean, std = self._matrix_rows(model, arr, toks, nodes)
         self._mat_cache = {"key": key, "model": model,
                            "mean": mean, "std": std}
         self._dirty_rows.clear()
@@ -976,7 +1026,8 @@ class LotaruML(_BiasLayer):
             idx[k] = i
             xs[k] = tokens
             ys[k] = runtime / (f * max(b, 1e-12))
-        new_model = update_task_batch_stream(model, idx, xs, ys)
+        with self._tracer.span("update_stream", n=len(obs)):
+            new_model = update_task_batch_stream(model, idx, xs, ys)
         affected = []
         for k, (cell_name, _, _, _) in enumerate(obs):
             fc = self.cells[cell_name]
@@ -1001,7 +1052,8 @@ class LotaruML(_BiasLayer):
                     cols.append(self._bias_col[node])
                     lrs.append(np.log(runtime / float(m_post)))
             if rows:
-                bias.update(rows, cols, lrs)
+                with self._tracer.span("bias_update", n=len(rows)):
+                    bias.update(rows, cols, lrs)
         c = self._batch_cache
         self._batch_cache = (c[0], c[1], new_model, c[3])
         if self._mat_cache is not None and self._mat_cache["model"] is model:

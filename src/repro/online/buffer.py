@@ -9,7 +9,7 @@ the estimator state reached online.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import asdict, dataclass
 
 import numpy as np
 
@@ -78,6 +78,22 @@ class ObservationBuffer:
         sizes = np.array([o.size for o in self._obs], np.float64)
         local = np.array([o.local_runtime for o in self._obs], np.float64)
         return idx, sizes, local
+
+    def to_dict(self) -> dict:
+        """JSON-ready dict of the stream (order-preserving) — the
+        observation half of ``ExecutionTrace.to_dict``."""
+        return {"observations": [asdict(o) for o in self._obs]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ObservationBuffer":
+        buf = cls()
+        for o in d["observations"]:
+            buf.add(Observation(task=str(o["task"]), node=str(o["node"]),
+                                size=float(o["size"]),
+                                runtime=float(o["runtime"]),
+                                local_runtime=float(o["local_runtime"]),
+                                time=float(o.get("time", 0.0))))
+        return buf
 
     def by_tick(self, atol: float = 1e-12) -> list[tuple[float,
                                                          list[Observation]]]:

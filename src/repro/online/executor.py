@@ -23,14 +23,19 @@ tail mass (``spec_tail``) instead of its point estimate.
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 
 import numpy as np
 
+from repro.obs.calibration import running_median
+from repro.obs.trace import NULL_TRACER
 from repro.sched.heft import SchedTask, heft_schedule_array
 from repro.sched.simulator import GridEngine
 
 from .buffer import ObservationBuffer
+
+#: ExecutionTrace.to_dict / from_dict on-disk format
+TRACE_SCHEMA_VERSION = 1
 
 
 @dataclass(frozen=True)
@@ -102,13 +107,64 @@ class ExecutionTrace:
 
     def cumulative_mpe(self) -> np.ndarray:
         """Running median prediction error after each completion — the
-        online trajectory (should fall as observations stream in)."""
-        errs = self.errors()
-        return np.array([np.median(errs[:k + 1]) for k in range(len(errs))])
+        online trajectory (should fall as observations stream in).
+        Incremental two-heap running median: O(n log n) total where the
+        prefix re-median was O(n²) — equivalence with the naive form is
+        property-tested."""
+        return running_median(r.error for r in self.records)
 
     def final_mpe(self) -> float:
         errs = self.errors()
         return float(np.median(errs)) if len(errs) else float("nan")
+
+    # ---- versioned machine-readable form ----------------------------------
+    def to_dict(self) -> dict:
+        """JSON-ready dict of the full trace (schema
+        ``TRACE_SCHEMA_VERSION``): every counter, every completed
+        ``TaskRun``, every ``CensoredRun``, and the observation stream.
+        ``from_dict`` round-trips bit-exactly, so bench artifacts and CI
+        uploads are machine-readable instead of ad-hoc prints."""
+        return {
+            "version": TRACE_SCHEMA_VERSION,
+            "makespan": self.makespan,
+            "replans": self.replans,
+            "surprises": self.surprises,
+            "speculations": self.speculations,
+            "spec_wins": self.spec_wins,
+            "failures": self.failures,
+            "retries": self.retries,
+            "lost_nodes": self.lost_nodes,
+            "stranded": self.stranded,
+            "completed": self.completed,
+            "total": self.total,
+            "records": [asdict(r) for r in self.records],
+            "censored": [asdict(c) for c in self.censored],
+            "observations": self.observations.to_dict(),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExecutionTrace":
+        version = d.get("version", 1)
+        if version > TRACE_SCHEMA_VERSION:
+            raise ValueError(
+                f"trace schema v{version} is newer than this reader "
+                f"(v{TRACE_SCHEMA_VERSION})")
+        return cls(
+            records=[TaskRun(**r) for r in d["records"]],
+            makespan=float(d["makespan"]),
+            replans=int(d["replans"]),
+            surprises=int(d["surprises"]),
+            speculations=int(d["speculations"]),
+            spec_wins=int(d["spec_wins"]),
+            failures=int(d.get("failures", 0)),
+            retries=int(d.get("retries", 0)),
+            lost_nodes=int(d.get("lost_nodes", 0)),
+            stranded=int(d.get("stranded", 0)),
+            completed=int(d.get("completed", 0)),
+            total=int(d.get("total", 0)),
+            censored=[CensoredRun(**c) for c in d.get("censored", [])],
+            observations=ObservationBuffer.from_dict(d["observations"]),
+        )
 
 
 class OnlineExecutor:
@@ -190,6 +246,17 @@ class OnlineExecutor:
         damage.  The static-plan-under-faults baseline runs non-strict:
         stranding work is exactly the failure mode the fault-tolerant
         loop exists to prevent.
+    tracer : a ``repro.obs`` tracer (e.g. ``EventLog``) or ``None``
+        (default, the zero-cost no-op path).  With a live tracer the
+        whole tick becomes observable: typed events (tick, plan,
+        dispatch, finish, observe — with interval coverage and PIT —
+        predict, surprise, speculation, fault, retry, backoff,
+        node_down/up, stranded) with sim- and wall-time stamps, plus
+        wall-clock spans around the HEFT (re-)plan and the estimator's
+        jitted predict/update dispatches (the tracer is attached to the
+        grid and the estimator too).  Tracing is strictly read-only:
+        ``run()`` output is bit-identical with and without it
+        (test-enforced, same pattern as the ``faults=None`` proof).
     """
 
     def __init__(self, estimator, tasks: dict[str, SchedTask],
@@ -201,7 +268,8 @@ class OnlineExecutor:
                  spec_tail: float | None = None,
                  faults=None, max_attempts: int = 4,
                  backoff_base: float = 1.0, backoff_cap: float = 30.0,
-                 rel_k: float | None = None, strict: bool = True):
+                 rel_k: float | None = None, strict: bool = True,
+                 tracer=None):
         if spec_tail is not None and not 0.0 < spec_tail < 1.0:
             raise ValueError(f"spec_tail must be in (0, 1), got {spec_tail}")
         if max_attempts < 1:
@@ -229,6 +297,13 @@ class OnlineExecutor:
         self.backoff_cap = float(backoff_cap)
         self.rel_k = rel_k
         self.strict = strict
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if tracer is not None:
+            # one log observes the whole stack: grid membership churn and
+            # the estimator's predict/update spans land in the same trace
+            grid.tracer = self.tracer
+            if hasattr(estimator, "set_tracer"):
+                estimator.set_tracer(self.tracer)
         # track attempt outcomes in the reliability posterior whenever a
         # fault process exists or reliability pricing is on (and the
         # estimator has the availability plane at all)
@@ -307,10 +382,14 @@ class OnlineExecutor:
                 default=t_now)
             for tid in unstarted])
         task_ready = np.maximum(task_ready, t_now)
-        sched = heft_schedule_array(
-            succ, pred, cost, unc, self.risk_k,
-            node_ready=self.grid.ready_vector(t_now),
-            task_ready=task_ready)
+        if self.tracer.enabled:
+            self.tracer.emit("plan", t_sim=t_now, n_tasks=len(unstarted),
+                             risk=self.risk_k > 0)
+        with self.tracer.span("plan", t_sim=t_now, n_tasks=len(unstarted)):
+            sched = heft_schedule_array(
+                succ, pred, cost, unc, self.risk_k,
+                node_ready=self.grid.ready_vector(t_now),
+                task_ready=task_ready)
         queues: dict[str, list[str]] = {n: [] for n in self.node_names}
         for i in sched["order"]:
             queues[self.node_names[sched["assignment"][i]]].append(
@@ -319,6 +398,14 @@ class OnlineExecutor:
 
     # ---- the loop ---------------------------------------------------------
     def run(self) -> ExecutionTrace:
+        tr = self.tracer
+        if tr.enabled:
+            tr.emit("run_start", t_sim=0.0, tasks=len(self.tasks),
+                    nodes=len(self.node_names), online=self.online,
+                    confidence=self.confidence, risk_k=self.risk_k,
+                    rel_k=self.rel_k, spec_tail=self.spec_tail,
+                    speculate=self.speculate,
+                    faults=self.faults is not None, strict=self.strict)
         trace = ExecutionTrace()
         trace.total = len(self.tasks)
         done: dict[str, float] = {}
@@ -384,6 +471,9 @@ class OnlineExecutor:
                     continue
                 q.remove(pick)
                 started.add(pick)
+                if tr.enabled:
+                    tr.emit("dispatch", t_sim=t_now, task=pick, node=node,
+                            attempt=attempt_no.get(pick, 0))
                 dur = launch(pick, node, t_now)
                 r, c = self._row[pick], self._type_idx[
                     self.grid.type_of(node).name]
@@ -413,6 +503,9 @@ class OnlineExecutor:
                 id=tid, name=self.task_name[tid], node=node,
                 node_type=self.grid.type_of(node).name,
                 start=start, lost_at=t_now, reason=reason))
+            if tr.enabled:
+                tr.emit("fault", t_sim=t_now, task=tid, node=node,
+                        reason=reason, elapsed=t_now - start)
             if self._track_rel:
                 self.est.record_attempt(node, False)
 
@@ -450,12 +543,19 @@ class OnlineExecutor:
                         f"lost (last on {node!r} at t={t_now:.2f}) — "
                         "raise max_attempts or fix the fault source")
                 stranded.add(tid)
+                if tr.enabled:
+                    tr.emit("stranded", t_sim=t_now, task=tid, node=node,
+                            reason="attempt budget exhausted")
                 return
             delay = self._backoff(fail_count[tid])
             retry_at[tid] = t_now + delay
             heapq.heappush(heap, (t_now + delay, seq, "retry", tid, None))
             seq += 1
             trace.retries += 1
+            if tr.enabled:
+                tr.emit("retry", t_sim=t_now, task=tid, node=node,
+                        delay=delay, fails=fail_count[tid],
+                        attempts=attempt_no.get(tid, 0))
             if not self.online:
                 # a static plan cannot re-plan: the retry goes back to
                 # its frozen node's queue if that node is still alive —
@@ -470,6 +570,9 @@ class OnlineExecutor:
                         "re-assign it")
                 else:
                     stranded.add(tid)
+                    if tr.enabled:
+                        tr.emit("stranded", t_sim=t_now, task=tid,
+                                node=node, reason="static plan, dead node")
 
         def replan_frontier(t_now: float) -> None:
             """Re-plan the unstarted frontier (membership changed or a
@@ -576,6 +679,10 @@ class OnlineExecutor:
                 expected_finish[tid] = min(expected_finish[tid],
                                            t_now + float(mean[r, c]))
                 trace.speculations += 1
+                if tr.enabled:
+                    tr.emit("speculation", t_sim=t_now, task=tid,
+                            node=node, alt=alt,
+                            overdue=t_now - (rec.start + envelope))
 
         while len(done) + len(stranded) < len(self.tasks):
             while dispatch(t):
@@ -585,6 +692,10 @@ class OnlineExecutor:
                                  if tid not in done and tid not in stranded)
                 if not self.strict:
                     stranded.update(missing)
+                    if tr.enabled:
+                        for mtid in missing:
+                            tr.emit("stranded", t_sim=t, task=mtid,
+                                    node=None, reason="execution stalled")
                     break
                 details = []
                 for btid in missing[:8]:
@@ -601,8 +712,12 @@ class OnlineExecutor:
                     f"execution stalled with {len(missing)} tasks blocked:"
                     "\n  " + "\n  ".join(details) + more)
             end, ev_seq, kind, a, b = heapq.heappop(heap)
+            if tr.enabled:
+                tr.emit("tick", t_sim=end, event=kind, seq=ev_seq)
             if kind == "retry":
                 t = max(t, end)          # backoff expired: just dispatch
+                if tr.enabled:
+                    tr.emit("backoff", t_sim=t, task=a)
                 continue
             if kind == "down":
                 t = max(t, end)
@@ -652,6 +767,12 @@ class OnlineExecutor:
                     trace.spec_wins += 1
                 if self._track_rel:
                     self.est.record_attempt(cnode, True)
+                if tr.enabled:
+                    crec = trace.records[rec_idx[ctid]]
+                    tr.emit("finish", t_sim=cend, task=ctid,
+                            node=crec.node, start=crec.start,
+                            runtime=crec.runtime,
+                            spec_win=sr is not None and sr.node == cnode)
             cooldown = max(0, cooldown - len(completions))
             if self.online:
                 # surprise gates BEFORE the update: was each realised
@@ -659,14 +780,32 @@ class OnlineExecutor:
                 # tick-start belief) considered likely?
                 batch = []
                 gates = []
+                pit_of = getattr(self.est, "predict_pit_node", None)
                 for ctid, cnode, _ in completions:
                     run = trace.records[rec_idx[ctid]]
                     name = self.task_name[ctid]
                     ntype = self.grid.type_of(cnode).name
                     lo, hi = self.est.predict_interval_node(
                         name, ntype, self.size, self.confidence)
-                    gates.append(not (lo <= run.runtime <= hi))
+                    gate = not (lo <= run.runtime <= hi)
+                    gates.append(gate)
                     batch.append((name, ntype, self.size, run.runtime))
+                    if tr.enabled:
+                        # the tick-start belief, read-only: the same
+                        # interval the surprise gate consumed, plus the
+                        # PIT of the realised runtime under it
+                        pit = (pit_of(name, ntype, self.size, run.runtime)
+                               if pit_of is not None else None)
+                        tr.emit("observe", t_sim=t, task=ctid, name=name,
+                                node=run.node, node_type=ntype,
+                                runtime=run.runtime,
+                                pred_mean=run.pred_mean,
+                                pred_std=run.pred_std,
+                                lo=lo, hi=hi, covered=not gate, pit=pit)
+                        if gate:
+                            tr.emit("surprise", t_sim=t, task=ctid,
+                                    name=name, node_type=ntype,
+                                    runtime=run.runtime, lo=lo, hi=hi)
                 local_rts = self.est.observe_batch(batch)
                 for (name, ntype, _, runtime), local_rt in zip(batch,
                                                                local_rts):
@@ -674,6 +813,9 @@ class OnlineExecutor:
                                               runtime, local_rt, time=t)
                 mean, std = self._estimates()     # dirty-row refresh only
                 trace.surprises += sum(gates)
+                if tr.enabled:
+                    tr.emit("predict", t_sim=t, n_obs=len(batch),
+                            surprises=sum(gates))
                 unstarted = [x for x in self.tasks
                              if x not in started and x not in done
                              and x not in stranded]
@@ -693,6 +835,14 @@ class OnlineExecutor:
             # placeholder records of attempts that never completed would
             # read as finished runs — keep only what actually ran to end
             trace.records = [r for r in trace.records if r.id in done]
+        if tr.enabled:
+            tr.emit("run_end", t_sim=trace.makespan,
+                    makespan=trace.makespan, completed=trace.completed,
+                    stranded=trace.stranded, replans=trace.replans,
+                    surprises=trace.surprises,
+                    speculations=trace.speculations,
+                    spec_wins=trace.spec_wins, failures=trace.failures,
+                    retries=trace.retries, mpe=trace.final_mpe())
         return trace
 
 

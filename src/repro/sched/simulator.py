@@ -233,6 +233,11 @@ class GridEngine:
 
     def __init__(self, nodes: list[SimNode]):
         self.nodes = {n.name: n for n in nodes}
+        # observability: membership churn (fail/join) is emitted through
+        # this tracer; NULL_TRACER is the zero-cost disabled default and
+        # OnlineExecutor(tracer=...) swaps in its live EventLog
+        from repro.obs.trace import NULL_TRACER
+        self.tracer = NULL_TRACER
 
     @classmethod
     def from_types(cls, nodes_per_type: int = 2,
@@ -280,6 +285,8 @@ class GridEngine:
         sn = self.nodes[name]
         sn.alive = False
         sn.busy_until = float(at)
+        if self.tracer.enabled:
+            self.tracer.emit("node_down", t_sim=at, node=name)
 
     def join(self, node: "SimNode | str", at: float = 0.0) -> None:
         """A node (re-)joins at ``at``: an existing name is revived (an
@@ -291,10 +298,15 @@ class GridEngine:
             node.alive = True
             node.busy_until = max(node.busy_until, float(at))
             self.nodes[node.name] = node
+            if self.tracer.enabled:
+                self.tracer.emit("node_up", t_sim=at, node=node.name,
+                                 new=True)
             return
         sn = self.nodes[node]
         sn.alive = True
         sn.busy_until = max(sn.busy_until, float(at))
+        if self.tracer.enabled:
+            self.tracer.emit("node_up", t_sim=at, node=node)
 
 
 class EventSimulator:

@@ -1,0 +1,20 @@
+"""Suite-wide fixtures.
+
+Every test module that drives the online executor compiles its own
+spread of XLA executables (one scan per distinct tick batch size, one
+HEFT solve per frontier shape).  Left to accumulate across the whole
+suite they exhaust the kernel's ``vm.max_map_count`` long before they
+exhaust memory — the process dies with a segfault inside
+``backend_compile``, not a Python error.  Clearing the jit cache
+between modules bounds the growth (same mitigation as
+``benchmarks/bench_online.py`` uses between arms) at the cost of a
+recompile per module.
+"""
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    import jax
+    jax.clear_caches()

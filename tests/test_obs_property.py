@@ -1,0 +1,28 @@
+"""Property tests for the two-heap running median (hypothesis)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; skip, don't die
+from hypothesis import given, settings, strategies as st
+
+from repro.obs import running_median
+
+floats = st.floats(min_value=-1e6, max_value=1e6,
+                   allow_nan=False, allow_infinity=False)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(floats, min_size=1, max_size=200))
+def test_running_median_equals_prefix_median(xs):
+    naive = np.array([np.median(xs[:k + 1]) for k in range(len(xs))])
+    np.testing.assert_array_equal(running_median(xs), naive)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(min_value=-5, max_value=5),
+                min_size=1, max_size=100))
+def test_running_median_duplicate_heavy_streams(xs):
+    """Plateaus of equal values exercise every heap-rebalance branch."""
+    xs = [float(x) for x in xs]
+    naive = np.array([np.median(xs[:k + 1]) for k in range(len(xs))])
+    np.testing.assert_array_equal(running_median(xs), naive)
