@@ -30,10 +30,14 @@ def main() -> None:
         print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
         try:
             rows.extend(mod.run())
-        except Exception:
+        except Exception as e:
+            # the sweep must keep going past any one table's failure (the
+            # modules call into arbitrary kernels, so the catch stays
+            # broad by design) — but the cause is bound, printed, and
+            # carried into the CSV row instead of silently discarded
             failed += 1
             traceback.print_exc()
-            rows.append((f"{name}.FAILED", 0.0, "exception"))
+            rows.append((f"{name}.FAILED", 0.0, repr(e)))
     print("\n--- CSV (name,us_per_call,derived) ---")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

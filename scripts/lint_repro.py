@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Run the repo's static-analysis suite (repro.analysis.lint).
+
+CI gate: exits non-zero when any diagnostic survives suppression.
+
+    python scripts/lint_repro.py                  # src/ benchmarks/ scripts/
+    python scripts/lint_repro.py src/repro/core   # a subtree
+    python scripts/lint_repro.py --select RA003,RA004
+    python scripts/lint_repro.py --list-rules
+
+Output is ``path:line:col: RULE message`` (clickable in most editors).
+When ``$GITHUB_STEP_SUMMARY`` is set, a markdown table naming each
+rule + file:line is appended there so CI failures are readable from
+the job summary without opening the log.
+"""
+import argparse
+import os
+import sys
+from collections import Counter
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis.lint import RULE_DOCS, registered_passes, run_paths  # noqa: E402
+
+DEFAULT_PATHS = ("src", "benchmarks", "scripts")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
+    ap.add_argument("--select", default=None, metavar="RULES",
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        registered_passes()          # populate RULE_DOCS
+        for rule in sorted(RULE_DOCS):
+            print(f"{rule}  {RULE_DOCS[rule]}")
+        return 0
+
+    select = [r.strip().upper() for r in args.select.split(",")] \
+        if args.select else None
+    paths = args.paths or [str(ROOT / p) for p in DEFAULT_PATHS]
+    diags, project = run_paths(paths, select=select)
+
+    for d in diags:
+        try:
+            shown = Path(d.path).resolve().relative_to(ROOT)
+        except ValueError:
+            shown = d.path
+        print(f"{shown}:{d.line}:{d.col}: {d.rule} {d.message}")
+
+    n_files = len(project.files)
+    if diags:
+        counts = ", ".join(f"{r} x{n}" for r, n in
+                           sorted(Counter(d.rule for d in diags).items()))
+        print(f"\n{len(diags)} finding(s) in {n_files} file(s): {counts}",
+              file=sys.stderr)
+        _github_summary(diags)
+        return 1
+    print(f"lint_repro: {n_files} files clean", file=sys.stderr)
+    return 0
+
+
+def _github_summary(diags) -> None:
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not summary:
+        return
+    with open(summary, "a") as fh:
+        fh.write("## lint_repro findings\n\n| rule | location | message |\n"
+                 "|---|---|---|\n")
+        for d in diags:
+            msg = d.message.replace("|", "\\|")
+            fh.write(f"| {d.rule} | `{d.path}:{d.line}` | {msg} |\n")
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

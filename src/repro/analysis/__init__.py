@@ -1,5 +1,9 @@
 from .hlo_stats import HloStats, analyze_hlo, parse_hlo
 from .roofline import HBM_BW, LINK_BW, PEAK_FLOPS, Roofline, model_flops
 
+#: repro.analysis.lint (the static-analysis suite) is intentionally NOT
+#: imported here: the runtime analysis tools above are jax-adjacent,
+#: the linter is pure-stdlib and must import fast in CI.
+
 __all__ = ["HloStats", "analyze_hlo", "parse_hlo", "HBM_BW", "LINK_BW",
            "PEAK_FLOPS", "Roofline", "model_flops"]

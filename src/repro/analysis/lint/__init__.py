@@ -1,0 +1,17 @@
+"""Repo-native static analysis: the recurring JAX bug classes as
+enforced lint passes (RA001–RA005, plus RA000 suppression hygiene).
+
+Entry points:
+
+>>> from repro.analysis.lint import run_paths
+>>> diagnostics, project = run_paths(["src"])
+
+or the CLI: ``python scripts/lint_repro.py``.
+"""
+from .core import (Diagnostic, LintPass, Project, RULE_DOCS, SourceFile,
+                   Suppression, parse_file, register, registered_passes,
+                   run_paths, run_project)
+
+__all__ = ["Diagnostic", "LintPass", "Project", "RULE_DOCS", "SourceFile",
+           "Suppression", "parse_file", "register", "registered_passes",
+           "run_paths", "run_project"]

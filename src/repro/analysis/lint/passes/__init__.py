@@ -1,0 +1,13 @@
+"""Built-in lint passes — importing this module registers them.
+
+Each pass encodes one bug class this repo has actually paid for; the
+rule catalogue with the historical incidents lives in
+``docs/static_analysis.md``.  Adding a pass: subclass
+:class:`repro.analysis.lint.core.LintPass`, decorate with
+:func:`repro.analysis.lint.core.register`, import it here.
+"""
+from . import (dtype_discipline, event_taxonomy, exception_hygiene,  # noqa: F401
+               jit_purity, schema_roundtrip)
+
+__all__ = ["jit_purity", "dtype_discipline", "event_taxonomy",
+           "schema_roundtrip", "exception_hygiene"]

@@ -1,0 +1,90 @@
+"""Small AST helpers shared by the concrete passes."""
+from __future__ import annotations
+
+import ast
+
+__all__ = ["dotted", "const_str", "call_name", "func_params",
+           "assigned_names", "literal_dtype"]
+
+
+def dotted(node: ast.AST) -> str | None:
+    """``jax.lax.scan`` -> "jax.lax.scan" for Name/Attribute chains,
+    None for anything else."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def const_str(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def call_name(node: ast.Call) -> str | None:
+    return dotted(node.func)
+
+
+def func_params(fn: ast.FunctionDef | ast.AsyncFunctionDef | ast.Lambda
+                ) -> set[str]:
+    a = fn.args
+    names = {p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)}
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    return names
+
+
+def assigned_names(body: list[ast.stmt]) -> set[str]:
+    """Every plain name bound anywhere inside ``body`` (assignments,
+    for-targets, with-as, walrus, nested defs, imports)."""
+    out: set[str] = set()
+
+    class V(ast.NodeVisitor):
+        def visit_Name(self, n: ast.Name):
+            if isinstance(n.ctx, (ast.Store, ast.Del)):
+                out.add(n.id)
+
+        def visit_FunctionDef(self, n):
+            out.add(n.name)
+            self.generic_visit(n)
+
+        visit_AsyncFunctionDef = visit_FunctionDef
+
+        def visit_ClassDef(self, n):
+            out.add(n.name)
+            self.generic_visit(n)
+
+        def visit_alias(self, n: ast.alias):
+            out.add((n.asname or n.name).split(".")[0])
+
+        def visit_NamedExpr(self, n):
+            self.generic_visit(n)
+
+    v = V()
+    for stmt in body:
+        v.visit(stmt)
+    return out
+
+
+#: dotted names that count as a literal dtype mention
+_DTYPE_LITERALS = {
+    "jnp.float32": "float32", "np.float32": "float32",
+    "numpy.float32": "float32", "jax.numpy.float32": "float32",
+    "jnp.bfloat16": "bfloat16", "jax.numpy.bfloat16": "bfloat16",
+    "jnp.float16": "float16", "np.float16": "float16",
+    "jnp.float64": "float64", "np.float64": "float64",
+}
+
+
+def literal_dtype(node: ast.AST) -> str | None:
+    """"float32" for a literal float-dtype attribute (``jnp.float32``,
+    ``np.float32``, ...), else None."""
+    d = dotted(node)
+    return _DTYPE_LITERALS.get(d) if d else None

@@ -1,0 +1,133 @@
+"""RA002 — dtype discipline in the estimator plane and model einsums.
+
+Two historical bugs, one rule:
+
+* the PR 1 ``blr.predict`` bug: a hard-coded ``jnp.float32`` cast on
+  the prediction path silently downcast the float64 posterior under
+  ``jax_enable_x64``, costing ~7 decimal digits of agreement.  The fix
+  is the ``blr._dtype()`` policy helper (float64 iff x64 is on) — so in
+  the numeric estimator modules, any *literal* float-dtype in a cast /
+  array-construction call is flagged;
+* the PR 3 zamba2 mismatch: the decode path ran an fp32 conv einsum
+  while prefill ran the same conv in bf16, and the drift compounded
+  past tolerance.  Statically we catch the call-site-visible version:
+  a ``jnp.einsum`` in ``models/`` whose operands carry *different*
+  literal dtype casts (``.astype(jnp.float32)`` on one, bf16 or bare on
+  another) without a ``preferred_element_type=`` accumulate annotation.
+
+Scoping matters: Pallas kernels and the optimiser legitimately pin
+fp32 accumulators, so the literal-dtype check only applies to the
+estimator-plane modules in :data:`POLICY_MODULES`, and the einsum check
+only to ``models/``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from ..core import Diagnostic, LintPass, Project, SourceFile, register
+from .common import dotted, literal_dtype
+
+#: path fragments of modules under the `_dtype()` policy (the numeric
+#: estimator plane, where x64-vs-x32 follows jax_enable_x64)
+POLICY_MODULES = ("core/", "online/", "sched/")
+
+#: path fragment for the mixed-einsum check
+MODEL_MODULES = ("models/",)
+
+#: calls whose dtype-position argument is checked (positional index of
+#: the dtype arg, or None when dtype is keyword-only in our usage)
+_CAST_CALLS = {"astype": 0, "asarray": 1, "array": 1, "zeros": 1,
+               "ones": 1, "full": 2, "empty": 1, "arange": None,
+               "zeros_like": 1, "ones_like": 1, "full_like": 2}
+
+
+def _literal_dtype_args(call: ast.Call) -> list[tuple[ast.AST, str]]:
+    """(node, dtype) for every literal float dtype in dtype position."""
+    fn = call.func
+    name = fn.attr if isinstance(fn, ast.Attribute) else (
+        fn.id if isinstance(fn, ast.Name) else None)
+    out: list[tuple[ast.AST, str]] = []
+    if name in _CAST_CALLS:
+        pos = _CAST_CALLS[name]
+        if pos is not None and pos < len(call.args):
+            dt = literal_dtype(call.args[pos])
+            if dt:
+                out.append((call.args[pos], dt))
+        for kw in call.keywords:
+            if kw.arg == "dtype":
+                dt = literal_dtype(kw.value)
+                if dt:
+                    out.append((kw.value, dt))
+    # np.float32(x) / jnp.float32(x) used as a cast constructor
+    dt = literal_dtype(fn)
+    if dt and call.args:
+        out.append((fn, dt))
+    return out
+
+
+def _operand_cast(arg: ast.AST) -> str | None:
+    """Literal dtype when the einsum operand is ``<expr>.astype(<literal>)``
+    at its top level, else None."""
+    if isinstance(arg, ast.Call) and isinstance(arg.func, ast.Attribute) \
+            and arg.func.attr == "astype" and arg.args:
+        return literal_dtype(arg.args[0])
+    return None
+
+
+@register
+class DtypeDisciplinePass(LintPass):
+    rule = "RA002"
+    doc = ("dtype discipline: literal float32/bf16 casts in estimator-plane "
+           "modules (use blr._dtype()), mixed-precision einsum operands in "
+           "models/ without preferred_element_type")
+
+    def check(self, src: SourceFile, project: Project) -> Iterable[Diagnostic]:
+        path = src.path.replace("\\", "/")
+        if any(m in path for m in POLICY_MODULES):
+            yield from self._check_policy(src)
+        if any(m in path for m in MODEL_MODULES):
+            yield from self._check_einsums(src)
+
+    def _check_policy(self, src: SourceFile) -> Iterable[Diagnostic]:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            for dt_node, dt in _literal_dtype_args(node):
+                if dt in ("float64",):
+                    # float64 literals only appear in deliberate
+                    # serialisation paths (JSON round-trips are written
+                    # at full width regardless of the compute policy)
+                    continue
+                yield self.diag(
+                    src, dt_node,
+                    f"literal {dt} cast in an estimator-plane module — "
+                    "the numeric dtype follows jax_enable_x64; use "
+                    "blr._dtype() so x64 runs keep float64 (the PR 1 "
+                    "blr.predict bug class)")
+
+    def _check_einsums(self, src: SourceFile) -> Iterable[Diagnostic]:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if dotted(node.func) not in ("jnp.einsum", "jax.numpy.einsum",
+                                         "np.einsum"):
+                continue
+            if any(kw.arg == "preferred_element_type"
+                   for kw in node.keywords):
+                continue          # sanctioned mixed-precision accumulate
+            operands = [a for a in node.args
+                        if not (isinstance(a, ast.Constant)
+                                and isinstance(a.value, str))]
+            casts = [_operand_cast(a) for a in operands]
+            literal = [c for c in casts if c]
+            if not literal:
+                continue
+            if len(set(literal)) > 1 or len(literal) != len(operands):
+                got = [c or "<uncast>" for c in casts]
+                yield self.diag(
+                    src, node,
+                    f"einsum mixes operand dtypes {got} — cast every "
+                    "operand consistently or state the accumulator with "
+                    "preferred_element_type= (the PR 3 zamba2 fp32/bf16 "
+                    "conv mismatch class)")

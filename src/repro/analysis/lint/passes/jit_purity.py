@@ -1,0 +1,228 @@
+"""RA001 — host-side effects reachable from traced (jit/vmap/scan) code.
+
+Historical bug this encodes: the PR 2 ``SampleLog`` leak — an untraced
+host-side object attached to a model pytree was silently swallowed by
+``jax.jit``, so its mutations vanished on the compiled path and the
+median fallback went stale.  The same class covers ``print`` inside a
+scan body (traces once, then never again), ``.item()`` / ``float()``
+forced syncs on the hot path, and in-place mutation of captured
+containers (the trace sees the pre-mutation snapshot).
+
+Detection is scoped to *traced functions*: functions decorated with
+``jax.jit`` (bare or via ``partial``), functions passed to
+``jax.jit`` / ``jax.vmap`` / ``jax.lax.scan`` / ``cond`` /
+``while_loop`` / ``fori_loop`` / ``jax.grad`` / ``pallas_call``, and —
+transitively, within the same file — any function they call by name.
+Inside those we flag:
+
+* ``print(...)`` calls;
+* ``.item()`` calls (device sync, silently unjits the hot path);
+* ``float(x)`` / ``int(x)`` / ``bool(x)`` where ``x`` is (rooted at) a
+  traced parameter — a concretization sync point.  Static-shape reads
+  (``.shape`` / ``.ndim`` / ``len``) are exempt: shapes are not traced;
+* in-place mutation of captured state: mutator-method calls
+  (``.append`` / ``.update`` / ...), subscript stores, and attribute
+  stores whose receiver is a free variable or ``self``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from ..core import Diagnostic, LintPass, Project, SourceFile, register
+from .common import assigned_names, dotted, func_params
+
+#: callables whose function-valued arguments become traced
+#: (argument positions holding functions)
+_TRACE_ENTRIES: dict[str, tuple[int, ...]] = {
+    "jax.jit": (0,), "jit": (0,),
+    "jax.vmap": (0,), "vmap": (0,),
+    "jax.pmap": (0,),
+    "jax.grad": (0,), "jax.value_and_grad": (0,),
+    "jax.checkpoint": (0,), "jax.remat": (0,),
+    "jax.lax.scan": (0,), "lax.scan": (0,),
+    "jax.lax.cond": (1, 2), "lax.cond": (1, 2),
+    "jax.lax.while_loop": (0, 1), "lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,), "lax.fori_loop": (2,),
+    "jax.lax.switch": (1,), "lax.switch": (1,),
+    "pl.pallas_call": (0,), "pallas_call": (0,),
+}
+
+#: decorator spellings that make the decorated def a trace root
+_TRACE_DECOS = {"jax.jit", "jit", "jax.vmap", "vmap", "jax.pmap",
+                "jax.checkpoint", "jax.remat"}
+
+_MUTATORS = {"append", "extend", "insert", "add", "update", "setdefault",
+             "pop", "popitem", "remove", "discard", "clear", "write",
+             "appendleft", "sort", "reverse"}
+
+_SYNC_BUILTINS = {"float", "int", "bool", "complex"}
+
+_SHAPE_ATTRS = {"shape", "ndim", "size", "dtype"}
+
+
+def _root_name(node: ast.AST) -> str | None:
+    """Leftmost Name of an attribute/subscript chain."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _unwrap_partial(node: ast.AST) -> ast.AST:
+    """``partial(f, ...)`` -> ``f`` (one level)."""
+    if isinstance(node, ast.Call) and \
+            dotted(node.func) in ("partial", "functools.partial") and node.args:
+        return node.args[0]
+    return node
+
+
+def _mentions_shape(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in _SHAPE_ATTRS:
+            return True
+        if isinstance(sub, ast.Call) and dotted(sub.func) == "len":
+            return True
+    return False
+
+
+class _Fn:
+    """One function-ish node with the scope facts the checks need."""
+
+    def __init__(self, node: ast.FunctionDef | ast.AsyncFunctionDef | ast.Lambda):
+        self.node = node
+        self.params = func_params(node)
+        body = node.body if isinstance(node.body, list) else [node.body]
+        self.locals = self.params | assigned_names(body)
+        self.name = getattr(node, "name", "<lambda>")
+
+
+@register
+class JitPurityPass(LintPass):
+    rule = "RA001"
+    doc = ("jit-purity: host-side effects (print/.item()/float()/captured-"
+           "container mutation) inside jit/vmap/scan-traced functions")
+
+    def check(self, src: SourceFile, project: Project) -> Iterable[Diagnostic]:
+        # index every def in the file by name (for Name -> def resolution)
+        defs: dict[str, list[ast.AST]] = {}
+        for node in ast.walk(src.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(node.name, []).append(node)
+
+        traced: dict[ast.AST, str] = {}          # fn node -> why it is traced
+
+        def mark(fn_node: ast.AST, why: str) -> None:
+            if isinstance(fn_node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                    ast.Lambda)) and fn_node not in traced:
+                traced[fn_node] = why
+
+        def resolve(arg: ast.AST, why: str) -> None:
+            arg = _unwrap_partial(arg)
+            if isinstance(arg, ast.Lambda):
+                mark(arg, why)
+            elif isinstance(arg, ast.Name):
+                for d in defs.get(arg.id, ()):
+                    mark(d, why)
+
+        # 1) decorator roots
+        for name, nodes in defs.items():
+            for node in nodes:
+                for deco in node.decorator_list:
+                    target = deco.func if isinstance(deco, ast.Call) else deco
+                    d = dotted(_unwrap_partial(deco)) \
+                        if isinstance(deco, ast.Call) else dotted(target)
+                    if isinstance(deco, ast.Call):
+                        # @partial(jax.jit, ...) or @jax.jit(...)
+                        inner = deco.args[0] if (
+                            dotted(deco.func) in ("partial", "functools.partial")
+                            and deco.args) else deco.func
+                        d = dotted(inner)
+                    if d in _TRACE_DECOS:
+                        mark(node, f"decorated with {d}")
+
+        # 2) call-site roots: jax.jit(f), lax.scan(body, ...), ...
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Call):
+                entry = dotted(node.func)
+                for pos in _TRACE_ENTRIES.get(entry or "", ()):
+                    if pos < len(node.args):
+                        resolve(node.args[pos], f"passed to {entry}")
+
+        # 3) same-file transitive closure over simple Name calls
+        changed = True
+        while changed:
+            changed = False
+            for fn, why in list(traced.items()):
+                for sub in ast.walk(fn):
+                    if isinstance(sub, ast.Call) and \
+                            isinstance(sub.func, ast.Name):
+                        for d in defs.get(sub.func.id, ()):
+                            if d not in traced:
+                                traced[d] = (f"called from traced "
+                                             f"{getattr(fn, 'name', '<lambda>')}")
+                                changed = True
+
+        for fn_node, why in traced.items():
+            yield from self._check_traced(src, _Fn(fn_node), why)
+
+    # ------------------------------------------------------------------
+    def _check_traced(self, src: SourceFile, fn: _Fn,
+                      why: str) -> Iterable[Diagnostic]:
+        ctx = f"in traced `{fn.name}` ({why})"
+        body = fn.node.body if isinstance(fn.node.body, list) else [fn.node.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                # nested defs are re-visited as their own traced entries
+                # by the closure above only when called; their bodies
+                # still execute at trace time, so keep walking them.
+                if isinstance(node, ast.Call):
+                    d = dotted(node.func)
+                    if d == "print":
+                        yield self.diag(src, node,
+                                        f"print() {ctx} runs at trace time "
+                                        "only — use jax.debug.print or hoist "
+                                        "it out of the traced region")
+                    elif isinstance(node.func, ast.Attribute) and \
+                            node.func.attr == "item" and not node.args:
+                        yield self.diag(src, node,
+                                        f".item() {ctx} forces a device sync "
+                                        "and fails under trace — return the "
+                                        "array and read it host-side")
+                    elif d in _SYNC_BUILTINS and len(node.args) == 1 and \
+                            not isinstance(node.args[0], ast.Constant):
+                        arg = node.args[0]
+                        root = _root_name(arg)
+                        if root in fn.params and not _mentions_shape(arg):
+                            yield self.diag(
+                                src, node,
+                                f"{d}() on traced parameter `{root}` {ctx} "
+                                "is a concretization sync point — keep the "
+                                "value as an array under trace")
+                    elif isinstance(node.func, ast.Attribute) and \
+                            node.func.attr in _MUTATORS:
+                        root = _root_name(node.func.value)
+                        if root is not None and (
+                                root == "self" or root not in fn.locals):
+                            yield self.diag(
+                                src, node,
+                                f".{node.func.attr}() mutates captured "
+                                f"`{root}` {ctx} — the trace sees a one-time "
+                                "snapshot; mutations are lost on the "
+                                "compiled path (the SampleLog bug class)")
+                elif isinstance(node, (ast.Assign, ast.AnnAssign)):
+                    targets = node.targets if isinstance(node, ast.Assign) \
+                        else [node.target]
+                    for t in targets:
+                        if isinstance(t, (ast.Attribute, ast.Subscript)):
+                            root = _root_name(t)
+                            if root is not None and (
+                                    root == "self" or root not in fn.locals):
+                                kind = ("attribute" if isinstance(t, ast.Attribute)
+                                        else "subscript")
+                                yield self.diag(
+                                    src, t,
+                                    f"{kind} store on captured `{root}` "
+                                    f"{ctx} — host-side state mutated under "
+                                    "trace is silently dropped; use "
+                                    "functional updates (.at[].set) or "
+                                    "re-attach after jit")

@@ -130,7 +130,11 @@ class AsyncCheckpointer:
             try:
                 save(self.ckpt_dir, step, host_state, metadata)
                 self._gc()
-            except Exception as e:  # surfaced on next wait()
+            except (OSError, ValueError, TypeError) as e:
+                # surfaced on next wait(): disk/permission failures
+                # (OSError), np.save on a malformed leaf (ValueError),
+                # non-JSON-serialisable metadata (TypeError) — anything
+                # else is a programming error and should crash the thread
                 self.last_error = e
 
         self._thread = threading.Thread(target=work, daemon=True)

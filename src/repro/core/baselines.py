@@ -70,7 +70,10 @@ class OnlineP(OnlineM):
             try:
                 a, loc, scale = stats.gamma.fit(y, floc=0.0)
                 ll_gamma = float(np.sum(stats.gamma.logpdf(y, a, loc, scale)))
-            except Exception:
+            except (ValueError, RuntimeError):
+                # scipy's MLE raises ValueError on degenerate samples and
+                # FitError (a RuntimeError) on non-convergence; either way
+                # the Gamma candidate simply loses the model selection
                 ll_gamma = -np.inf
             if ll_gamma > ll_norm:
                 self.dist_mean_ = float(a * scale)

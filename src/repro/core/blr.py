@@ -46,7 +46,20 @@ from scipy import stats as _scipy_stats
 
 
 def _default_dtype():
+    """The repo-wide numeric dtype policy: float64 iff ``jax_enable_x64``.
+
+    Every cast in the estimator plane routes through here — a literal
+    ``jnp.float32`` on a numeric path silently downcasts x64 runs (the
+    PR 1 ``predict`` bug), which is why RA002 in
+    ``repro.analysis.lint`` flags literal float dtypes in these
+    modules.  This definition is the policy itself, not a cast call, so
+    the literal below is the one sanctioned mention.
+    """
     return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+
+
+#: short alias used by lint docs/messages ("the blr._dtype() policy")
+_dtype = _default_dtype
 
 
 @dataclass(frozen=True)

@@ -237,7 +237,13 @@ def main() -> None:
                 t0 = time.time()
                 try:
                     rec = run_cell(arch, shape, multi_pod)
-                except Exception as e:  # record the failure, keep sweeping
+                except (ValueError, TypeError, KeyError, RuntimeError,
+                        NotImplementedError) as e:
+                    # record the failure, keep sweeping: shape/sharding
+                    # mismatches (ValueError/TypeError), unknown arch or
+                    # missing config key (KeyError), XLA compile errors
+                    # (XlaRuntimeError is a RuntimeError), unimplemented
+                    # lowerings (NotImplementedError)
                     failures += 1
                     rec = {"arch": arch, "shape": shape,
                            "mesh": "pod2x16x16" if multi_pod else "pod16x16",

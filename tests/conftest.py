@@ -10,7 +10,21 @@ between modules bounds the growth (same mitigation as
 ``benchmarks/bench_online.py`` uses between arms) at the cost of a
 recompile per module.
 """
+import os
+
 import pytest
+
+#: REPRO_SANITIZE=1 turns on jax's runtime sanitizers for the whole
+#: session (must happen before any trace is built): ``jax_debug_nans``
+#: re-runs any primitive that produced a NaN un-jitted and raises with
+#: the offending op, ``jax_enable_checks`` enables jax's internal
+#: invariant assertions.  CI runs a fast numeric test subset under this
+#: mode (see .github/workflows/ci.yml `lint` job) — the dynamic
+#: complement to the static RA00x passes in repro.analysis.lint.
+if os.environ.get("REPRO_SANITIZE") == "1":
+    import jax
+    jax.config.update("jax_debug_nans", True)
+    jax.config.update("jax_enable_checks", True)
 
 
 @pytest.fixture(autouse=True, scope="module")

@@ -1,0 +1,16 @@
+"""A file none of the passes should flag."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def pure(x):
+    return jnp.tanh(x) * 2.0
+
+
+def host_side(model, xs):
+    results = []
+    for x in xs:                 # host loop, mutation of a local: fine
+        results.append(pure(x))
+    print("done")                # print outside any traced region: fine
+    return results

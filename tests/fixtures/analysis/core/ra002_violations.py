@@ -1,0 +1,30 @@
+"""RA002 fixture (estimator-plane scope: lives under a ``core/`` path).
+
+Literal float32 casts in a policy module — the PR 1 blr.predict class.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+
+def bad_cast(x):
+    return jnp.asarray(x, jnp.float32)          # line 10: RA002
+
+
+def bad_astype(x):
+    return x.astype(np.float32)                 # line 14: RA002
+
+
+def bad_ctor(x):
+    return np.float32(x)                        # line 18: RA002
+
+
+def bad_kw(x):
+    return jnp.zeros((3,), dtype=jnp.float32)   # line 22: RA002
+
+
+def ok_policy(x, dt):
+    return jnp.asarray(x, dt)                   # dtype from policy: clean
+
+
+def ok_serialise(x):
+    return np.asarray(x, np.float64)            # full-width JSON path: clean

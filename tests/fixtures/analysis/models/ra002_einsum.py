@@ -1,0 +1,22 @@
+"""RA002 fixture (models/ scope): mixed-precision einsum operands."""
+import jax.numpy as jnp
+
+
+def bad_mixed(h, w):
+    return jnp.einsum("btd,dv->btv", h.astype(jnp.float32),
+                      w.astype(jnp.bfloat16))   # line 6: RA002 fp32 x bf16
+
+
+def bad_half_cast(h, w):
+    return jnp.einsum("btd,dv->btv",
+                      h.astype(jnp.float32), w)  # line 11: RA002 one uncast
+
+
+def ok_consistent(h, w):
+    return jnp.einsum("btd,dv->btv", h.astype(jnp.float32),
+                      w.astype(jnp.float32))
+
+
+def ok_preferred(h, w):
+    return jnp.einsum("btd,dv->btv", h, w,
+                      preferred_element_type=jnp.float32)

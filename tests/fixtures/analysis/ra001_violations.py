@@ -1,0 +1,62 @@
+"""RA001 fixture: host-side effects inside traced functions.
+
+Line numbers are asserted exactly in tests/test_analysis_lint.py —
+append new cases at the end or renumber the expectations.
+"""
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+HISTORY = []
+
+
+@jax.jit
+def bad_print(x):
+    print("tracing", x)            # line 15: RA001 print under trace
+    return x * 2
+
+
+@partial(jax.jit, static_argnames=("n",))
+def bad_sync(x, n):
+    y = x.sum()
+    return float(y) + n            # not flagged: y is a local, not a param
+
+
+@jax.jit
+def bad_param_sync(x):
+    return float(x) + 1.0          # line 27: RA001 float() on traced param
+
+
+@jax.jit
+def bad_item(x):
+    return x.sum().item()          # line 32: RA001 .item() sync
+
+
+@jax.jit
+def bad_capture(x):
+    HISTORY.append(x)              # line 37: RA001 captured-container mutation
+    return x + 1
+
+
+class Model:
+    @jax.jit
+    def bad_attach(self, x):
+        self.last = x              # line 44: RA001 attribute store on self
+        return x
+
+
+def outer(xs):
+    def body(carry, x):
+        print(carry)               # line 50: RA001 print in scan body
+        return carry + x, x
+    total, _ = jax.lax.scan(body, jnp.zeros(()), xs)
+    return total
+
+
+def fine_shapes(x):
+    pass
+
+
+@jax.jit
+def ok_static_shape(x):
+    return x.reshape(int(x.shape[0]), -1)   # shape read: NOT flagged

@@ -1,0 +1,21 @@
+"""RA003 fixture: taxonomy with an unemitted kind, emit sites with an
+unknown kind and an unresolvable kind.  Self-contained: defines its own
+EVENT_KINDS so the pass binds to this file when linting the fixture dir.
+"""
+
+EVENT_KINDS = frozenset({
+    "start",        # emitted below: fine
+    "finish",       # emitted below: fine
+    "ghost",        # line 9 area — never emitted: RA003 on EVENT_KINDS line 6
+})
+
+RESERVED_EVENT_KINDS = frozenset({
+    "reserved_ok",  # documented as reserved; absence is NOT flagged
+})
+
+
+def run(tracer, dynamic_kind):
+    tracer.emit("start", t_sim=0.0)
+    tracer.emit("finish", t_sim=1.0)
+    tracer.emit("fnish", t_sim=2.0)          # line 20: RA003 typo'd kind
+    tracer.emit(dynamic_kind, t_sim=3.0)     # line 21: RA003 unresolvable

@@ -1,0 +1,36 @@
+"""RA004 fixture: schema round-trip holes and non-monotone guards."""
+
+SCHEMA_VERSION = 5
+
+
+class LeakyState:
+    def to_dict(self) -> dict:
+        return {"version": SCHEMA_VERSION,
+                "kept": 1,
+                "dropped": 2,          # line 10: RA004 never consumed
+                "pinned": 3}
+
+    @classmethod
+    def from_dict(cls, d):
+        version = d.get("version", 1)
+        out = cls()
+        out.kept = d["kept"]
+        if version == 3:               # line 18: RA004 non-monotone pin
+            out.pinned = d["pinned"]
+        if version >= 9:               # line 20: RA004 out of range 1..5
+            pass
+        return out
+
+
+class CleanState:
+    def to_dict(self) -> dict:
+        return {"version": SCHEMA_VERSION, "a": 1, "b": 2}
+
+    @classmethod
+    def from_dict(cls, d):
+        version = d.get("version", 1)
+        out = cls()
+        out.a = d["a"]
+        if version >= 2:
+            out.b = d.get("b", 0)
+        return out

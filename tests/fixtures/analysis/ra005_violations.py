@@ -1,0 +1,50 @@
+"""RA005 fixture: broad and bare exception handlers."""
+import logging
+
+log = logging.getLogger(__name__)
+
+
+def bad_bare():
+    try:
+        risky()
+    except:                            # line 10: RA005 bare except
+        pass
+
+
+def bad_broad_silent():
+    try:
+        risky()
+    except Exception:                  # line 17: RA005 silent broad catch
+        return None
+
+
+def bad_base(out):
+    try:
+        risky()
+    except BaseException as e:         # line 24: RA005 BaseException, no raise
+        out.append(e)
+
+
+def ok_named_and_used():
+    try:
+        risky()
+    except Exception as e:             # bound AND used: record-and-continue
+        log.warning("risky failed: %r", e)
+
+
+def ok_reraise():
+    try:
+        risky()
+    except Exception:
+        raise
+
+
+def ok_narrow():
+    try:
+        risky()
+    except (ValueError, KeyError):
+        return None
+
+
+def risky():
+    raise ValueError("boom")

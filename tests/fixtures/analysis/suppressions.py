@@ -1,0 +1,27 @@
+"""RA000 fixture: justified vs bare vs unknown-rule suppressions."""
+import jax
+
+
+@jax.jit
+def justified(x):
+    print(x)  # repro: ignore[RA001] -- frozen trace-time debug aid, fires once by design
+    return x
+
+
+@jax.jit
+def bare(x):
+    print(x)  # repro: ignore[RA001]
+    return x                           # line 13 comment: RA000 (no why)
+
+
+@jax.jit
+def unknown_rule(x):
+    print(x)  # repro: ignore[RA999] -- this rule id does not exist anywhere
+    return x                           # RA000 unknown rule + RA001 unsuppressed
+
+
+@jax.jit
+def line_above(x):
+    # repro: ignore[RA001] -- suppression on the preceding line also binds here
+    print(x)
+    return x

@@ -1,0 +1,198 @@
+"""The static-analysis framework itself: every rule fires on its
+planted fixture with the exact rule id and line, suppressions behave,
+and the registry/CLI plumbing holds.
+
+Pure-stdlib under test (no jax import needed to lint), so this module
+is cheap to run under the REPRO_SANITIZE CI arm too.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import (RULE_DOCS, Diagnostic, LintPass, Project,
+                                 parse_file, register, registered_passes,
+                                 run_paths, run_project)
+
+FIXTURES = Path(__file__).parent / "fixtures" / "analysis"
+
+
+def lint(*names, select=None):
+    paths = [FIXTURES / n for n in names] if names else [FIXTURES]
+    diags, _ = run_paths(paths, select=select)
+    return diags
+
+
+def rule_lines(diags, rule):
+    return [d.line for d in diags if d.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixture checks: exact ids and line numbers
+# ---------------------------------------------------------------------------
+def test_ra001_exact_lines():
+    diags = lint("ra001_violations.py")
+    assert rule_lines(diags, "RA001") == [15, 27, 32, 37, 44, 50]
+    assert {d.rule for d in diags} == {"RA001"}
+
+
+def test_ra001_local_float_not_flagged():
+    # float(y) on a local intermediate (bad_sync, line 22) must NOT fire:
+    # the heuristic only flags syncs rooted at traced parameters
+    diags = lint("ra001_violations.py")
+    assert 22 not in rule_lines(diags, "RA001")
+
+
+def test_ra002_policy_modules_exact_lines():
+    diags = lint("core/ra002_violations.py")
+    assert rule_lines(diags, "RA002") == [10, 14, 18, 22]
+    assert {d.rule for d in diags} == {"RA002"}
+
+
+def test_ra002_einsum_exact_lines():
+    diags = lint("models/ra002_einsum.py")
+    assert rule_lines(diags, "RA002") == [6, 11]
+
+
+def test_ra002_scope_is_path_based():
+    # the same literal casts outside a policy path are not RA002's business
+    clean = FIXTURES / "ra005_violations.py"   # not under core/ or models/
+    diags, _ = run_paths([clean], select=["RA002"])
+    assert diags == []
+
+
+def test_ra003_exact_lines():
+    diags = lint("ra003_violations.py")
+    lines = rule_lines(diags, "RA003")
+    assert lines == [6, 20, 21]
+    msgs = {d.line: d.message for d in diags}
+    assert "ghost" in msgs[6]             # unemitted kind, at the taxonomy
+    assert "fnish" in msgs[20]            # typo'd kind, at the emit site
+    assert "not a string literal" in msgs[21]
+    # reserved kinds are exempt from the closure check
+    assert not any("reserved_ok" in d.message for d in diags)
+
+
+def test_ra004_exact_lines():
+    diags = lint("ra004_violations.py")
+    lines = rule_lines(diags, "RA004")
+    assert lines == [10, 18, 20]
+    msgs = {d.line: d.message for d in diags}
+    assert "'dropped'" in msgs[10]
+    assert "version == 3" in msgs[18]
+    assert "outside the known schema range" in msgs[20]
+    # CleanState must not be flagged
+    assert all(d.line < 24 for d in diags)
+
+
+def test_ra005_exact_lines():
+    diags = lint("ra005_violations.py")
+    assert rule_lines(diags, "RA005") == [10, 17, 24]
+
+
+def test_clean_file_is_clean():
+    assert lint("clean.py") == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+def test_justified_suppression_suppresses():
+    diags = lint("suppressions.py")
+    # the justified ignore on line 7 leaves no RA001 and no RA000 there
+    assert all(d.line != 7 for d in diags)
+
+
+def test_bare_suppression_is_flagged_as_ra000():
+    diags = lint("suppressions.py")
+    ra000 = [d for d in diags if d.rule == "RA000"]
+    assert any(d.line == 13 and "without justification" in d.message
+               for d in ra000)
+    # ...but it still suppresses the named rule (no double report)
+    assert 13 not in rule_lines(diags, "RA001")
+
+
+def test_unknown_rule_suppression():
+    diags = lint("suppressions.py")
+    assert any(d.rule == "RA000" and "RA999" in d.message for d in diags)
+    # an unknown-rule ignore does not suppress the real finding
+    assert 19 in rule_lines(diags, "RA001")
+
+
+def test_suppression_on_line_above_binds():
+    diags = lint("suppressions.py")
+    assert 26 not in rule_lines(diags, "RA001")
+
+
+def test_suppression_in_string_literal_is_inert():
+    # core.py's own docstring contains example ignore comments; tokenize-
+    # based parsing must not treat them as live suppressions
+    src = parse_file(Path("src/repro/analysis/lint/core.py"))
+    doc_lines = {s.line for s in src.suppressions}
+    assert doc_lines == set()
+
+
+# ---------------------------------------------------------------------------
+# framework plumbing
+# ---------------------------------------------------------------------------
+def test_select_filters_rules():
+    diags = lint(select=["RA005"])
+    assert diags and all(d.rule == "RA005" for d in diags)
+
+
+def test_select_unknown_rule_raises():
+    with pytest.raises(ValueError, match="unknown rule"):
+        run_paths([FIXTURES], select=["RA777"])
+
+
+def test_rule_docs_catalogue_complete():
+    registered_passes()
+    assert set(RULE_DOCS) >= {"RA000", "RA001", "RA002", "RA003",
+                              "RA004", "RA005"}
+    assert all(RULE_DOCS[r] for r in RULE_DOCS)
+
+
+def test_plugin_registration_roundtrip():
+    class Probe(LintPass):
+        rule = "RA900"
+        doc = "test-only probe pass"
+
+        def check(self, src, project):
+            yield self.diag(src, 1, "probe")
+
+    try:
+        register(Probe)
+        diags, _ = run_paths([FIXTURES / "clean.py"], select=["RA900"])
+        assert [d.rule for d in diags] == ["RA900"]
+    finally:
+        from repro.analysis.lint.core import _REGISTRY
+        _REGISTRY.pop("RA900", None)
+        RULE_DOCS.pop("RA900", None)
+
+
+def test_unparseable_file_reports_not_crashes(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def broken(:\n")
+    diags, _ = run_paths([bad])
+    assert len(diags) == 1 and diags[0].rule == "RA000"
+    assert "unparseable" in diags[0].message
+
+
+def test_diagnostics_are_ordered_and_unique():
+    diags = lint()
+    assert diags == sorted(set(diags))
+
+
+def test_cli_exit_codes(tmp_path):
+    import subprocess
+    import sys
+    root = Path(__file__).resolve().parents[1]
+    r = subprocess.run(
+        [sys.executable, str(root / "scripts" / "lint_repro.py"),
+         str(FIXTURES / "clean.py")], capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+    r = subprocess.run(
+        [sys.executable, str(root / "scripts" / "lint_repro.py"),
+         str(FIXTURES / "ra005_violations.py")],
+        capture_output=True, text=True)
+    assert r.returncode == 1
+    assert "RA005" in r.stdout
