@@ -30,6 +30,15 @@ checks that the fault-tolerant loop (retries with capped backoff,
 censored observations, Beta-Binomial reliability pricing) completes
 100% of every workflow within a committed makespan-inflation bound,
 while the frozen static plan strands the dead nodes' work.
+
+A fifth section (``scale``) sweeps the (T, N) estimate-matrix size to
+~1M cells and the stacked workflow axis W to 64: steady-state per-tick
+wall time of the fused ``tick_step`` engine vs the legacy
+observe → update → bias scatter → dirty-row re-predict sequence (same
+observation batches, per-phase spans through the ``repro.obs`` lanes),
+plus the vmapped/sharded fleet tick's cell throughput.  The gate
+asserts the fused tick beats legacy by ``SCALE_MIN_SPEEDUP``x at the
+100k-cell point.
 """
 from __future__ import annotations
 
@@ -44,11 +53,15 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np
 
-from repro.core import LotaruEstimator, blr, get_node, profile_cluster, \
-    profile_node, target_nodes
+from repro.core import LotaruEstimator, TickEngine, blr, build_state, \
+    get_node, profile_cluster, profile_node, target_nodes
+from repro.core.estimator import FittedTask
+from repro.core.profiler import BenchResult
+from repro.launch.mesh import make_fleet_mesh
 from repro.obs import (EventLog, calibration_summary, observe_records,
                        tick_latency_summary)
 from repro.online import OnlineExecutor, fanout_chain_dag
+from repro.online.fleet import fleet_tick_step, shard_fleet, stack_states
 from repro.sched.simulator import ClusterSimulator, FaultInjector, GridEngine
 from repro.sched.workflows import INPUTS, WORKFLOWS
 
@@ -418,16 +431,199 @@ def bench_fault_tolerance(n_samples: int = 8, nodes_per_type: int = 2,
             "n_workflows": len(results)}
 
 
+# ---------------------------------------------------------------------------
+# scale arm (PR 9): fused tick vs the legacy four-dispatch tick at (T, N),
+# plus the vmapped (W, T, N) fleet sweep
+# ---------------------------------------------------------------------------
+SCALE_BATCH = 64         # observations per tick — both arms see the SAME ones
+SCALE_WARM = 2           # warm-up ticks (compile + cache priming), untimed
+SCALE_TICKS = 5          # timed steady-state ticks per point
+SCALE_SIZE = 64.0        # shared input size of the sweep
+SCALE_GATE_CELLS = 100_000   # gate point: fused must win here
+SCALE_MIN_SPEEDUP = 5.0      # ... by at least this factor
+
+#: gate-mode (T, N) points — (2048, 50) is the 102 400-cell gate point
+SCALE_POINTS_GATE = [(256, 16), (2048, 50)]
+#: the full sweep adds the ~1M-cell ceiling
+SCALE_POINTS_FULL = SCALE_POINTS_GATE + [(1024, 64), (4096, 256)]
+
+
+def _scale_bench(name: str, rng) -> BenchResult:
+    return BenchResult(node=name,
+                       cpu_events_s=float(rng.uniform(300.0, 900.0)),
+                       matmul_gflops=float(rng.uniform(50.0, 200.0)),
+                       mem_gbps=float(rng.uniform(10.0, 40.0)),
+                       io_read_mbps=float(rng.uniform(200.0, 800.0)),
+                       io_write_mbps=float(rng.uniform(200.0, 800.0)),
+                       link_gbps=0.0)
+
+
+def _scale_estimator(n_tasks: int, n_nodes: int, seed: int = 0):
+    """A real ``LotaruEstimator`` at arbitrary (T, N): synthetic benches
+    for N nodes, one ``fit_task_batch`` solve for T tasks injected as
+    ``FittedTask``s (the batch cache is primed with the same fit, exactly
+    like ``fit_tasks``) — the paper's five workflows top out at T=14, so
+    the sweep needs shapes the workflow registry cannot provide."""
+    rng = np.random.default_rng(seed)
+    local = _scale_bench("local-cpu", rng)
+    nodes = [f"n{j}" for j in range(n_nodes)]
+    benches = {n: _scale_bench(n, rng) for n in nodes}
+    est = LotaruEstimator(local, benches, bias_correction=True,
+                          bias_empirical_bayes=True)
+    sizes_list, runtimes_list = _synthetic_samples(n_tasks, seed=seed)
+    batch = blr.fit_task_batch(sizes_list, runtimes_list)
+    names = [f"t{i}" for i in range(n_tasks)]
+    ws = rng.uniform(0.2, 0.95, n_tasks)
+    for i, (name, model) in enumerate(zip(names,
+                                          blr.unstack_task_models(batch))):
+        est.tasks[name] = FittedTask(model=model, w=float(ws[i]),
+                                     sizes=np.asarray(sizes_list[i]),
+                                     runtimes=np.asarray(runtimes_list[i]))
+    est._batch_cache = (names, [est.tasks[n] for n in names], batch,
+                        np.asarray(ws, np.float64))
+    return est, names, nodes
+
+
+def _scale_obs(names, nodes, rng, batch: int):
+    """One tick's worth of (task, node, size, runtime) observations.
+
+    Tasks are drawn WITHOUT replacement so every tick dirties the same
+    number of distinct rows — the legacy dirty-row re-predict compiles
+    one executable per distinct-row count, and a steady-state comparison
+    must not charge it a recompile per tick."""
+    rows = rng.choice(len(names), size=min(batch, len(names)),
+                      replace=False)
+    return [(names[int(r)],
+             nodes[int(rng.integers(0, len(nodes)))],
+             SCALE_SIZE, float(rng.uniform(5.0, 120.0)))
+            for r in rows]
+
+
+def _scale_point(t: int, n: int, seed: int = 0) -> dict:
+    """Steady-state per-tick wall time of both tick implementations at
+    (T, N): legacy = ``observe_batch`` + dirty-row ``predict_matrix``
+    (four dispatches stitched by Python), fused = ``TickEngine`` (one
+    donated ``tick_step``).  Same observation batches, per-phase spans
+    through the ``repro.obs`` lanes."""
+    rng = np.random.default_rng(seed + 17)
+    batches = [_scale_obs([f"t{i}" for i in range(t)],
+                          [f"n{j}" for j in range(n)], rng, SCALE_BATCH)
+               for _ in range(SCALE_WARM + SCALE_TICKS)]
+
+    def drive(tick):
+        for b in batches[:SCALE_WARM]:
+            tick(b)
+        t0 = time.perf_counter()
+        for b in batches[SCALE_WARM:]:
+            tick(b)
+        return (time.perf_counter() - t0) / SCALE_TICKS
+
+    est, _names, nodes = _scale_estimator(t, n, seed=seed)
+    log_l = EventLog()
+    est.set_tracer(log_l)
+    est.predict_matrix(nodes, SCALE_SIZE)          # prime cache + compile
+
+    def legacy_tick(b):
+        est.observe_batch(b)
+        m, _s = est.predict_matrix(nodes, SCALE_SIZE)
+        return m
+
+    legacy_s = drive(legacy_tick)
+    jax.clear_caches()
+
+    est2, _names, nodes = _scale_estimator(t, n, seed=seed)
+    log_f = EventLog()
+    engine = TickEngine(est2, nodes, size=SCALE_SIZE, tracer=log_f)
+
+    def fused_tick(b):
+        engine.observe_batch(b)
+        m, _s = engine.predict_matrix(nodes, SCALE_SIZE)
+        return m
+
+    fused_s = drive(fused_tick)
+    jax.clear_caches()
+    return {"t": t, "n": n, "cells": t * n, "batch": SCALE_BATCH,
+            "legacy_tick_s": legacy_s, "fused_tick_s": fused_s,
+            "speedup": legacy_s / fused_s,
+            "phases_legacy": tick_latency_summary(log_l.events),
+            "phases_fused": tick_latency_summary(log_f.events)}
+
+
+def _fleet_point(w: int, t: int, n: int, seed: int = 0) -> dict:
+    """Throughput of the vmapped fleet tick over W stacked workflows,
+    sharded across whatever devices the mesh exposes when the W axis
+    divides (a single device replicates — today's layout)."""
+    est, _names, nodes = _scale_estimator(t, n, seed=seed)
+    state, _sn = build_state(est, nodes)
+    fleet = stack_states([state] * w)
+    mesh = make_fleet_mesh(task=1)
+    wf_axis = dict(mesh.shape)["wf"]
+    sharded = w % wf_axis == 0
+    if sharded:
+        fleet = shard_fleet(fleet, mesh)
+    rng = np.random.default_rng(seed + 23)
+    sizes = np.full(w, SCALE_SIZE)
+
+    def tick_obs():
+        rows = rng.integers(0, t, (w, SCALE_BATCH))
+        cols = rng.integers(0, n, (w, SCALE_BATCH))
+        y = rng.uniform(5.0, 120.0, (w, SCALE_BATCH))
+        obs = np.zeros((w, SCALE_BATCH, 8))
+        obs[..., 0] = rows
+        obs[..., 1] = cols
+        obs[..., 2] = SCALE_SIZE
+        obs[..., 3] = y
+        obs[..., 5] = y                  # med/spr: any consistent history
+        obs[..., 6] = 1.0
+        obs[..., 7] = 1.0
+        return obs
+
+    for _ in range(SCALE_WARM):
+        fleet, mean, _std = fleet_tick_step(fleet, tick_obs(), sizes)
+    jax.block_until_ready(mean)
+    t0 = time.perf_counter()
+    for _ in range(SCALE_TICKS):
+        fleet, mean, _std = fleet_tick_step(fleet, tick_obs(), sizes)
+    jax.block_until_ready(mean)
+    tick_s = (time.perf_counter() - t0) / SCALE_TICKS
+    jax.clear_caches()
+    return {"w": w, "t": t, "n": n, "cells": w * t * n,
+            "devices": len(jax.devices()), "sharded": sharded,
+            "mesh_wf": wf_axis, "tick_s": tick_s,
+            "cells_per_s": w * t * n / tick_s}
+
+
+def bench_scale(points=None, fleet_ws=None, *, fleet_t: int = 128,
+                fleet_n: int = 16, seed: int = 0) -> dict:
+    points = SCALE_POINTS_FULL if points is None else points
+    fleet_ws = [4, 16, 64] if fleet_ws is None else fleet_ws
+    pts = [_scale_point(t, n, seed=seed) for t, n in points]
+    fleets = [_fleet_point(w, fleet_t, fleet_n, seed=seed)
+              for w in fleet_ws]
+    gate_pts = [p for p in pts if p["cells"] >= SCALE_GATE_CELLS]
+    gate_speedup = min((p["speedup"] for p in gate_pts),
+                       default=float("nan"))
+    return {"batch": SCALE_BATCH, "warm_ticks": SCALE_WARM,
+            "timed_ticks": SCALE_TICKS, "size": SCALE_SIZE,
+            "gate_cells": SCALE_GATE_CELLS,
+            "min_speedup": SCALE_MIN_SPEEDUP,
+            "points": pts, "fleet": fleets,
+            "gate_speedup": gate_speedup}
+
+
 def run(n_tasks: int = 1000, n_samples: int = 8,
-        nodes_per_type: int = 2) -> list[tuple]:
+        nodes_per_type: int = 2, scale_points=None,
+        fleet_ws=None) -> list[tuple]:
     thr = bench_update_throughput(n_tasks=n_tasks)
     eq = bench_equivalence(n_tasks=max(50, n_tasks // 5))
     wf = bench_workflows(n_samples=n_samples, nodes_per_type=nodes_per_type)
     fl = bench_fault_tolerance(n_samples=n_samples,
                                nodes_per_type=nodes_per_type)
+    jax.clear_caches()
+    sc = bench_scale(points=scale_points, fleet_ws=fleet_ws)
     result = {"config": {"n_tasks": n_tasks, "x64": True},
               "throughput": thr, "equivalence": eq, "execution": wf,
-              "faults": fl}
+              "faults": fl, "scale": sc}
     OUT.write_text(json.dumps(result, indent=2))
     print(f"update: {thr['update_s']*1e6:.0f}us/obs vs refit "
           f"{thr['refit_s']*1e3:.1f}ms -> "
@@ -474,6 +670,19 @@ def run(n_tasks: int = 1000, n_samples: int = 8,
           f"max inflation {fl['max_inflation']:.2f}x "
           f"(bound {fl['inflation_bound']}x), static strands on "
           f"{fl['static_strands']}/{fl['n_workflows']}")
+    for p in sc["points"]:
+        print(f"  scale ({p['t']:5d}x{p['n']:3d} = {p['cells']:7d} cells) "
+              f"tick {p['legacy_tick_s']*1e3:.2f}ms legacy -> "
+              f"{p['fused_tick_s']*1e3:.2f}ms fused "
+              f"({p['speedup']:.1f}x)")
+    for p in sc["fleet"]:
+        print(f"  fleet W={p['w']:2d} ({p['cells']:7d} cells, "
+              f"{p['devices']} device(s), "
+              f"{'sharded' if p['sharded'] else 'unsharded'}) "
+              f"tick {p['tick_s']*1e3:.2f}ms = "
+              f"{p['cells_per_s']/1e6:.1f}M cells/s")
+    print(f"scale gate: {sc['gate_speedup']:.1f}x fused-over-legacy at "
+          f">= {sc['gate_cells']} cells (need >= {sc['min_speedup']}x)")
     print(f"wrote {OUT}")
     return [("bench_online.update_throughput", thr["update_s"] * 1e6,
              f"speedup={thr['update_speedup_vs_refit']:.0f}x"),
@@ -490,7 +699,9 @@ def run(n_tasks: int = 1000, n_samples: int = 8,
              f"{wf['calibration_in_band']}/{wf['n_workflows']}"),
             ("bench_online.fault_completion", 0.0,
              f"{fl['ft_complete']}/{fl['n_workflows']};"
-             f"inflation={fl['max_inflation']:.2f}x")]
+             f"inflation={fl['max_inflation']:.2f}x"),
+            ("bench_online.scale_speedup", sc["gate_speedup"],
+             f"{sc['gate_speedup']:.1f}x@>={sc['gate_cells']}cells")]
 
 
 if __name__ == "__main__":
@@ -501,10 +712,27 @@ if __name__ == "__main__":
                     help="small throughput shapes but FULL-size workflow "
                          "arms — the CI perf gate asserts the online and "
                          "bias MPE wins on these numbers")
+    ap.add_argument("--scale-smoke", action="store_true",
+                    help="tiny (W=4, T=64, N=8) scale arm only, no "
+                         "BENCH_online.json write — the CI multi-device "
+                         "sharding smoke")
     a = ap.parse_args()
-    if a.quick:
-        run(n_tasks=64, n_samples=2, nodes_per_type=1)
+    if a.scale_smoke:
+        sc = bench_scale(points=[(64, 8)], fleet_ws=[4],
+                         fleet_t=64, fleet_n=8)
+        p = sc["points"][0]
+        print(f"scale smoke ({p['t']}x{p['n']}): legacy "
+              f"{p['legacy_tick_s']*1e3:.2f}ms fused "
+              f"{p['fused_tick_s']*1e3:.2f}ms ({p['speedup']:.1f}x)")
+        f = sc["fleet"][0]
+        print(f"fleet smoke W={f['w']} on {f['devices']} device(s) "
+              f"({'sharded' if f['sharded'] else 'unsharded'}): "
+              f"{f['tick_s']*1e3:.2f}ms/tick")
+    elif a.quick:
+        run(n_tasks=64, n_samples=2, nodes_per_type=1,
+            scale_points=[(128, 16)], fleet_ws=[2])
     elif a.gate:
-        run(n_tasks=64, n_samples=8, nodes_per_type=2)
+        run(n_tasks=64, n_samples=8, nodes_per_type=2,
+            scale_points=SCALE_POINTS_GATE, fleet_ws=[4])
     else:
         run()

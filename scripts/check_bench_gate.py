@@ -19,7 +19,12 @@ useless when bisecting which workflow moved):
 * the predictive intervals must be *calibrated*: post-warm-up empirical
   coverage of the 90% interval implied by the risk-pricing σ in
   [0.80, 0.98] on >= 4/5 workflows (PR 6 invariant — both over- and
-  under-coverage corrupt risk_k pricing and speculation admission).
+  under-coverage corrupt risk_k pricing and speculation admission);
+* the fused tick must beat the legacy observe → update → re-predict
+  sequence by the committed factor at every (T, N) point with >= 100k
+  estimate-matrix cells (PR 9 invariant — the array-native engine
+  exists to make tick cost independent of Python dispatch, and a scale
+  section that has gone missing means the arm silently stopped running).
 """
 import json
 import sys
@@ -130,6 +135,29 @@ def main() -> int:
         for name, (pred, frac, summary_key) in FAULT_GATES.items():
             ok &= _check(name, lambda r, p=pred: p(r, f), frac,
                          summary_key, f["workflows"], f, fault_detail)
+
+    s = bench.get("scale")
+    if s is None:
+        print("FAIL scale section missing from BENCH_online.json — "
+              "bench_online predates the fused-tick arm or was truncated")
+        ok = False
+    else:
+        gate_pts = [p for p in s["points"]
+                    if p["cells"] >= s["gate_cells"]]
+        if not gate_pts:
+            print(f"FAIL scale: no (T, N) point reaches the "
+                  f"{s['gate_cells']}-cell gate size")
+            ok = False
+        for p in gate_pts:
+            win = (p["fused_tick_s"] < p["legacy_tick_s"]
+                   and p["speedup"] >= s["min_speedup"])
+            status = "ok  " if win else "FAIL"
+            print(f"{status} scale: fused tick at {p['t']}x{p['n']} "
+                  f"({p['cells']} cells): {p['speedup']:.1f}x over legacy "
+                  f"(need >= {s['min_speedup']}x; legacy "
+                  f"{p['legacy_tick_s']*1e3:.2f}ms, fused "
+                  f"{p['fused_tick_s']*1e3:.2f}ms)")
+            ok &= win
 
     if not ok:
         print("-- GATE FAILED")

@@ -52,6 +52,15 @@ _TRACE_ENTRIES: dict[str, tuple[int, ...]] = {
 _TRACE_DECOS = {"jax.jit", "jit", "jax.vmap", "vmap", "jax.pmap",
                 "jax.checkpoint", "jax.remat"}
 
+#: defs that are traced by CONTRACT, not (only) by visible jit/vmap
+#: plumbing: the fused-tick kernels (``repro.core.tick``) and their
+#: vmapped fleet twins (``repro.online.fleet``).  Their jit wrapping is a
+#: module-level call-site the resolver also sees, but the seed list keeps
+#: them covered even when the wrapping moves behind an indirection the
+#: AST walk cannot follow (a factory, a config-chosen variant).
+_SEED_TRACED = {"tick_step", "_tick_core", "_predict_state_core",
+                "fleet_tick_step", "_fleet_tick_core", "_fleet_predict_core"}
+
 _MUTATORS = {"append", "extend", "insert", "add", "update", "setdefault",
              "pop", "popitem", "remove", "discard", "clear", "write",
              "appendleft", "sort", "reverse"}
@@ -139,6 +148,13 @@ class JitPurityPass(LintPass):
                         d = dotted(inner)
                     if d in _TRACE_DECOS:
                         mark(node, f"decorated with {d}")
+
+        # 1b) contract roots: the fused tick kernel family is traced by
+        # name, wherever its jit wrapping happens to live
+        for name, nodes in defs.items():
+            if name in _SEED_TRACED:
+                for node in nodes:
+                    mark(node, "fused-tick seed list")
 
         # 2) call-site roots: jax.jit(f), lax.scan(body, ...), ...
         for node in ast.walk(src.tree):

@@ -570,9 +570,8 @@ def unstack_task_models(model: BatchedTaskModel) -> list[TaskModel]:
 # ---------------------------------------------------------------------------
 # Incremental (online) updates — rank-1 conjugate absorption of one sample
 # ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("prior_scale", "a0", "b0", "threshold"))
-def _update_core(model: BatchedTaskModel, obs,
-                 prior_scale, a0, b0, threshold) -> BatchedTaskModel:
+def _update_core_impl(model: BatchedTaskModel, obs,
+                      prior_scale, a0, b0, threshold) -> BatchedTaskModel:
     """Absorb one observation, packed as ``obs = [row, x, y, med, spr]``.
 
     A rank-1 moment update plus an O(d²) posterior recompute of the row —
@@ -583,6 +582,10 @@ def _update_core(model: BatchedTaskModel, obs,
     ``med`` / ``spr`` are the row's refreshed median/MAD, computed
     host-side from the untraced ``SampleLog`` (order statistics are not
     moments).
+
+    Unjitted body so larger fused kernels (``repro.core.tick``) can scan
+    it inside their own trace; standalone callers go through
+    ``_update_core`` below.
     """
     i = obs[0].astype(jnp.int32)
     x, y, med, spr = obs[1], obs[2], obs[3], obs[4]
@@ -611,6 +614,11 @@ def _update_core(model: BatchedTaskModel, obs,
         median=model.median.at[i].set(med),
         spread=model.spread.at[i].set(spr),
         stats=OnlineStats(moments=st.moments.at[i].set(m), log=st.log))
+
+
+_update_core = jax.jit(_update_core_impl,
+                       static_argnames=("prior_scale", "a0", "b0",
+                                        "threshold"))
 
 
 def _require_stats(model: BatchedTaskModel) -> None:

@@ -35,7 +35,7 @@ from .blr import (BatchedTaskModel, BiasModel, ReliabilityModel, TaskModel,
 from .downsample import partition_sizes
 from .profiler import BenchResult
 
-SCHEMA_VERSION = 5   # LotaruEstimator.save/load on-disk format
+SCHEMA_VERSION = 6   # LotaruEstimator.save/load on-disk format
 # v1: raw samples only (refit on load)     v2: + fitted posteriors
 # v3: + per-(task, node) bias state        v4: + bias hyperparameters
 # v5: + per-node reliability posterior          (decay, empirical_bayes)
@@ -618,18 +618,46 @@ class LotaruEstimator(_BiasLayer):
     # ---- offline reuse (paper §1: "allows for offline scenarios where the
     # learned models are reused for future executions") -----------------
     def save(self, path) -> None:
-        """Schema v5: persists the fitted posteriors themselves (v2), the
+        """Schema v6: persists the fitted posteriors themselves (v2), the
         online per-(task, node) bias state (v3), the bias
         hyperparameters — forgetting factor ``decay`` and the
-        ``empirical_bayes`` noise pooling (v4) — and the per-node
-        Beta–Binomial reliability posterior (v5), so a save → load round
-        trip reproduces predictions AND availability pricing bit-exactly,
-        including everything learned from streamed observations and
-        attempt outcomes.  Earlier files still load: missing v4/v5
-        fields default to the inert (bit-exact) values."""
+        ``empirical_bayes`` noise pooling (v4) — the per-node
+        Beta–Binomial reliability posterior (v5), and the consolidated
+        batched state (v6: the streamed (T, 8) moment matrix plus the
+        stacked posterior, the exact arrays an ``EstimatorState``
+        carries), so a save → load round trip reproduces predictions AND
+        availability pricing bit-exactly, including everything learned
+        from streamed observations and attempt outcomes — and a loaded
+        estimator resumes the fused tick MOMENT-exact, not refit-close
+        (re-deriving moments from raw samples sums in a different order).
+        Earlier files still load: missing v4/v5 fields default to the
+        inert (bit-exact) values, missing v6 state falls back to the
+        refit path."""
         import json
         from pathlib import Path
+        state = None
+        if self.tasks:
+            names, model, _w = self._batched()
+            if model.stats is not None:
+                p = model.post
+                state = {
+                    "tasks": list(names),
+                    "moments": np.asarray(model.stats.moments,
+                                          np.float64).tolist(),
+                    "correlated": np.asarray(model.correlated,
+                                             bool).tolist(),
+                    "median": np.asarray(model.median, np.float64).tolist(),
+                    "spread": np.asarray(model.spread, np.float64).tolist(),
+                    "post": {"mu": np.asarray(p.mu, np.float64).tolist(),
+                             "V": np.asarray(p.V, np.float64).tolist(),
+                             "a": np.asarray(p.a, np.float64).tolist(),
+                             "b": np.asarray(p.b, np.float64).tolist(),
+                             "x_scale": np.asarray(p.x_scale,
+                                                   np.float64).tolist(),
+                             "y_scale": np.asarray(p.y_scale,
+                                                   np.float64).tolist()}}
         out = {"version": SCHEMA_VERSION,
+               "state": state,
                "freq_reduction": self.freq_reduction,
                "bias_correction": self.bias_correction,
                "bias_opts": dict(self._bias_opts),
@@ -706,7 +734,46 @@ class LotaruEstimator(_BiasLayer):
             est.tasks[name] = FittedTask(model=model,
                                          w=rec["w"], sizes=sizes,
                                          runtimes=runtimes)
+        if version >= 6 and d.get("state") is not None:
+            st = d["state"]
+            est._prime_batch_cache(st, st["moments"], dt)
         return est
+
+    def _prime_batch_cache(self, st: dict, moments, dt) -> None:
+        """v6 fast path: rebuild the batched model from the persisted
+        moment matrix and stacked posterior — bit-exact to the saved
+        in-memory state — instead of refitting from raw samples (whose
+        different summation order perturbs the last ulp of the moments).
+        The raw-sample ``SampleLog`` (median-fallback history) is
+        reconstructed from the per-task arrays, which carry every
+        streamed observation."""
+        from .blr import (BatchedTaskModel, BLRPosterior, OnlineStats,
+                          SampleLog)
+        names = list(st["tasks"])
+        if names != list(self.tasks):
+            return                       # stale block: fall back to refit
+        fts = [self.tasks[n] for n in names]
+        p = st["post"]
+        post = BLRPosterior(
+            mu=jnp.asarray(p["mu"], dt), V=jnp.asarray(p["V"], dt),
+            a=jnp.asarray(p["a"], dt), b=jnp.asarray(p["b"], dt),
+            x_scale=jnp.asarray(p["x_scale"], dt),
+            y_scale=jnp.asarray(p["y_scale"], dt))
+        count = np.array([len(ft.sizes) for ft in fts], np.int64)
+        cap = max(1, int(count.max(initial=1)))
+        X = np.zeros((len(fts), cap), np.float64)
+        Y = np.zeros_like(X)
+        for i, ft in enumerate(fts):
+            X[i, :count[i]] = np.asarray(ft.sizes, np.float64)
+            Y[i, :count[i]] = np.asarray(ft.runtimes, np.float64)
+        stats = OnlineStats(moments=jnp.asarray(moments, dt),
+                            log=SampleLog(X, Y, count))
+        model = BatchedTaskModel(
+            correlated=jnp.asarray(st["correlated"]), post=post,
+            median=jnp.asarray(st["median"], dt),
+            spread=jnp.asarray(st["spread"], dt), stats=stats)
+        w = np.array([ft.w for ft in fts], np.float64)
+        self._batch_cache = (names, fts, model, w)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,384 @@
+"""The fused tick: observe → update → bias scatter → re-predict in ONE
+jitted, donated-buffer dispatch over ``EstimatorState``.
+
+The legacy online path is four separate dispatches per simulation tick
+(``update_task_batch_stream`` scan, per-row ``slice_task_model``
+writebacks, a host-side ``BiasModel.update`` scatter, and a dirty-row
+``predict_matrix`` re-predict), stitched together by Python in
+``LotaruEstimator.observe_batch``.  ``tick_step`` fuses the whole
+sequence into one ``state -> state`` function the scheduler can sit
+inside — and, because it is pure over a registered pytree, one that
+``vmap``s over a leading workflow axis (``repro.online.fleet``) and
+shards under ``jax.sharding.NamedSharding``.
+
+Observation batches are packed as an ``(B, 8)`` array::
+
+    [row, col, x, y_raw, y_local, med, spr, valid]
+
+* ``row``/``col`` — task row and prediction-node column (``state``'s
+  ``factors`` axes); ``x`` the input size; ``y_raw`` the measured
+  runtime on the node;
+* ``y_local`` — the host-de-adjusted local-equivalent runtime.  With
+  ``host_deadjust=True`` (the ``TickEngine`` executor path) it is used
+  verbatim, keeping the engine bit-compatible with
+  ``observe_batch``'s host float64 de-adjust; with ``False`` (the pure
+  device / fleet path) it is recomputed on device from ``y_raw`` and
+  the tick-start bias, and the packed value is ignored;
+* ``med``/``spr`` — the row's refreshed median/MAD (order statistics
+  live host-side in the ``SampleLog``, exactly as in the legacy path);
+* ``valid`` — padding mask (0 rows are no-ops), so fleet batches can
+  pad ragged per-workflow ticks to one shape.
+
+Rows flagged invalid leave every leaf bitwise untouched.
+"""
+from __future__ import annotations
+
+import numpy as np
+from scipy import stats as _scipy_stats
+
+import jax
+from jax import numpy as jnp
+
+from .blr import (BiasModel, _attach_log, _default_dtype, _predict_core,
+                  _update_core_impl, predict_cdf, predict_interval,
+                  predict_task_batch, slice_task_model)
+from .state import EstimatorState, bias_view, build_state, write_back
+
+
+def _sigma_r(meta, counts, log_sum, log_sq, dt):
+    """Device twin of ``BiasModel.effective_sigma_r`` — the fixed
+    ``sigma_r``, or the pooled empirical spread of the observed
+    log-residuals (floored) once any pair has two observations."""
+    if not meta.empirical_bayes:
+        return jnp.asarray(meta.sigma_r, dt)
+    mask = counts >= 2
+    safe_n = jnp.where(mask, counts, 1.0)
+    ss = jnp.where(mask, log_sq - log_sum ** 2 / safe_n, 0.0).sum()
+    dof = jnp.where(mask, counts - 1.0, 0.0).sum()
+    s = jnp.sqrt(jnp.maximum(ss, 0.0) / jnp.maximum(dof, 1.0))
+    pooled = jnp.maximum(s, BiasModel.SIGMA_R_FLOOR)
+    return jnp.where(mask.any(), pooled, jnp.asarray(meta.sigma_r, dt))
+
+
+def _fold_predict(model, state, counts, log_sum, log_sq, size):
+    """Full (T, N) factor-scaled predictive with the bias posterior
+    folded in — device twin of ``_scaled_matrix_core`` +
+    ``_fold_bias_matrix`` (point-scale the mean, delta-method-widen the
+    std, inert where unobserved or outside the bias universe)."""
+    meta = state.meta
+    dt = state.factors.dtype
+    mean_t, std_t = predict_task_batch(model, size)
+    mean = mean_t[:, None] * state.factors
+    std = std_t[:, None] * state.factors
+    if not meta.bias_correction:
+        return mean, std
+    sr = _sigma_r(meta, counts, log_sum, log_sq, dt)
+    safe_cols = jnp.maximum(state.node_cols, 0)
+    lam = 1.0 / meta.tau0 ** 2 + counts / sr ** 2
+    mu = log_sum / (sr ** 2 * lam)
+    v = 1.0 / lam
+    mu_g, v_g = mu[:, safe_cols], v[:, safe_cols]
+    n_g = counts[:, safe_cols]
+    active = (state.node_cols >= 0)[None, :] & (n_g > 0)
+    point = jnp.exp(mu_g)
+    out_mean = jnp.where(active, mean * point, mean)
+    widened = point * jnp.sqrt(std ** 2 + mean ** 2 * jnp.expm1(v_g))
+    out_std = jnp.where(active, widened, std)
+    return out_mean, out_std
+
+
+def _tick_core(state: EstimatorState, obs, size, host_deadjust):
+    """One fused tick.  Returns ``(state', mean, std, y_local)`` where
+    ``mean``/``std`` are the refreshed post-tick (T, N) estimate matrix
+    and ``y_local`` the (B,) local-equivalent runtimes that entered the
+    model (input order)."""
+    meta = state.meta
+    dt = state.factors.dtype
+    rows = obs[:, 0].astype(jnp.int32)
+    cols = obs[:, 1].astype(jnp.int32)
+    x, y_raw = obs[:, 2], obs[:, 3]
+    med, spr, valid = obs[:, 5], obs[:, 6], obs[:, 7] > 0
+    bcol = state.node_cols[cols]
+    safe_b = jnp.maximum(bcol, 0)
+    f = jnp.maximum(state.factors[rows, cols], 1e-12)
+    if meta.bias_correction:
+        # tick-START bias point estimates (the same values the legacy
+        # path reads via ``BiasModel.point`` before updating anything)
+        sr0 = _sigma_r(meta, state.bias_counts, state.bias_log_sum,
+                       state.bias_log_sq, dt)
+        n0 = state.bias_counts[rows, safe_b]
+        lam0 = 1.0 / meta.tau0 ** 2 + n0 / sr0 ** 2
+        mu0 = state.bias_log_sum[rows, safe_b] / (sr0 ** 2 * lam0)
+        b_pt = jnp.where((bcol >= 0) & (n0 > 0), jnp.exp(mu0), 1.0)
+    else:
+        b_pt = jnp.ones_like(y_raw)
+    if host_deadjust:
+        y = obs[:, 4]
+    else:
+        y = y_raw / (f * jnp.maximum(b_pt, 1e-12))
+
+    # --- streamed NIG moment/posterior update (masked scan) -------------
+    packed = jnp.stack([rows.astype(dt), x, y, med, spr,
+                        valid.astype(dt)], axis=-1)
+
+    def step(m, o):
+        upd = _update_core_impl(m, o[:5], meta.prior_scale, meta.a0,
+                                meta.b0, meta.threshold)
+        keep = o[5] > 0
+        return jax.tree_util.tree_map(
+            lambda new, old: jnp.where(keep, new, old), upd, m), None
+
+    model, _ = jax.lax.scan(step, state.model, packed)
+
+    counts = state.bias_counts
+    log_sum = state.bias_log_sum
+    log_sq = state.bias_log_sq
+    if meta.bias_correction:
+        # --- bias residuals vs the POST-update means (one scatter) ------
+        p = model.post
+        mean_b, _ = jax.vmap(_predict_core)(
+            p.mu[rows], p.V[rows], p.a[rows], p.b[rows],
+            p.x_scale[rows], p.y_scale[rows], x)
+        m_post = jnp.where(model.correlated[rows],
+                           jnp.maximum(mean_b, 0.0), model.median[rows])
+        scaled = f * m_post
+        resid_ok = valid & (bcol >= 0) & (y_raw > 0.0) & (scaled > 1e-12)
+        ratio = jnp.where(resid_ok,
+                          y_raw / jnp.where(resid_ok, scaled, 1.0), 1.0)
+        lr = jnp.log(ratio)
+        if meta.decay != 1.0:
+            # one update is one forgetting step: decay fires iff the tick
+            # contributes any residual, exactly like ``BiasModel.update``
+            mult = jnp.where(resid_ok.any(), jnp.asarray(meta.decay, dt),
+                             jnp.asarray(1.0, dt))
+            counts, log_sum, log_sq = (counts * mult, log_sum * mult,
+                                       log_sq * mult)
+        zero = jnp.zeros_like(lr)
+        counts = counts.at[rows, safe_b].add(
+            jnp.where(resid_ok, jnp.ones_like(lr), zero))
+        log_sum = log_sum.at[rows, safe_b].add(
+            jnp.where(resid_ok, lr, zero))
+        log_sq = log_sq.at[rows, safe_b].add(
+            jnp.where(resid_ok, lr * lr, zero))
+
+    mean, std = _fold_predict(model, state, counts, log_sum, log_sq, size)
+    new_state = EstimatorState(
+        model=model, factors=state.factors, node_cols=state.node_cols,
+        bias_counts=counts, bias_log_sum=log_sum, bias_log_sq=log_sq,
+        rel_succ=state.rel_succ, rel_fail=state.rel_fail, meta=meta)
+    return new_state, mean, std, y
+
+
+def _predict_state_core(state: EstimatorState, size):
+    """Estimate matrix of a state without absorbing anything — the
+    tick-zero twin of ``tick_step``'s (mean, std) outputs."""
+    return _fold_predict(state.model, state, state.bias_counts,
+                         state.bias_log_sum, state.bias_log_sq, size)
+
+
+#: the fused tick entry point: donated state buffers (the input state is
+#: consumed, like an optimiser state), one compile per (B, T, N) shape
+tick_step = jax.jit(_tick_core, static_argnames=("host_deadjust",),
+                    donate_argnums=(0,))
+
+predict_state = jax.jit(_predict_state_core)
+
+
+class TickEngine:
+    """Executor-facing driver of the fused tick.
+
+    Owns an ``EstimatorState`` snapshot of a fitted estimator and
+    replaces the estimator's per-tick surface (``observe_batch`` +
+    ``predict_matrix`` + the scalar interval/PIT/bias consumers) with
+    ``tick_step`` outputs, while keeping the host-side pieces the legacy
+    path keeps host-side: the raw-sample ``SampleLog`` (order
+    statistics), the de-adjust of measured runtimes (bit-compatible
+    float64, ``host_deadjust=True``) and the Beta-Binomial reliability
+    plane (consumed by the scheduler, not the tick).
+
+    The wrapped estimator is NOT updated per tick — call ``finalize()``
+    when the run ends to write the final state back through the thin
+    views, after which the estimator continues (scalar predicts,
+    save/load, further ``observe_batch`` ticks) from exactly where the
+    engine left off.
+    """
+
+    def __init__(self, est, nodes, *, size: float, tracer=None):
+        from ..obs.trace import NULL_TRACER
+        self.est = est
+        self.size = float(size)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.state, self.names = build_state(est, nodes)
+        self._rowmap = {n: i for i, n in enumerate(self.names.tasks)}
+        self._colmap = {n: j for j, n in enumerate(self.names.nodes)}
+        self._log = self.state.model.stats.log
+        self._model = self.state.model
+        self._bias = bias_view(self.state) if est.bias_correction else None
+        self._bias_col = dict(est._bias_col)
+        self._touched: set[int] = set()
+        self._rel_dirty = False
+        mean, std = predict_state(self.state, self.size)
+        self._mean = np.asarray(mean, np.float64)
+        self._std = np.asarray(std, np.float64)
+
+    # ---- estimator-compatible per-tick surface ------------------------
+    def predict_matrix(self, nodes, size, with_std: bool = True):
+        if list(nodes) != self.names_nodes or float(size) != self.size:
+            raise ValueError(
+                "TickEngine serves one (nodes, size) configuration; got "
+                f"{list(nodes)}/{size}, engine holds "
+                f"{self.names_nodes}/{self.size}")
+        return self._mean, (self._std if with_std else None)
+
+    @property
+    def names_nodes(self) -> list[str]:
+        return list(self.names.nodes)
+
+    def observe_batch(self, observations) -> list[float]:
+        """One fused tick: de-adjust host-side (bitwise the legacy
+        float64 math), append the raw history, then dispatch ONE
+        ``tick_step`` that absorbs the stream, scatters the bias
+        residuals and re-predicts the full (T, N) matrix."""
+        obs = list(observations)
+        if not obs:
+            return []
+        est = self.est
+        dt = _default_dtype()
+        packed = np.zeros((len(obs), 8), np.float64)
+        ys = np.empty(len(obs), np.float64)
+        for k, o in enumerate(obs):
+            task, node, size, runtime = (o if isinstance(o, (tuple, list))
+                                         else (o.task, o.node, o.size,
+                                               o.runtime))
+            task, node = str(task), str(node)
+            size, runtime = float(size), float(runtime)
+            i = self._rowmap[task]
+            f = max(float(est.factor(task, node)), 1e-12)
+            b = 1.0
+            if self._bias is not None and node in self._bias_col:
+                b = self._bias.point(i, self._bias_col[node])
+            y = runtime / (f * max(b, 1e-12))
+            self._log.append(i, size, y)
+            med, spr = self._log.median_spread(i)
+            packed[k] = (i, self._colmap[node], size, runtime, y, med,
+                         spr, 1.0)
+            ys[k] = y
+            ft = est.tasks[task]
+            ft.sizes = np.append(ft.sizes, size)
+            ft.runtimes = np.append(ft.runtimes, y)
+            self._touched.add(i)
+        if self._rel_dirty:
+            self._sync_reliability()
+        with self.tracer.span("tick_step", n=len(obs)):
+            state, mean, std, _y = tick_step(self.state,
+                                             jnp.asarray(packed, dt),
+                                             self.size, host_deadjust=True)
+            self._mean = np.asarray(mean, np.float64)
+            self._std = np.asarray(std, np.float64)
+        self.state = state
+        self._model = _attach_log(state.model, self._log)
+        if self._bias is not None:
+            self._bias.counts = np.asarray(state.bias_counts, np.float64)
+            self._bias.log_sum = np.asarray(state.bias_log_sum, np.float64)
+            self._bias.log_sq = np.asarray(state.bias_log_sq, np.float64)
+            self._bias._sigma_r_cache = None
+        return [float(v) for v in ys]
+
+    # ---- scalar consumers (tick-start belief) -------------------------
+    def predict_interval_node(self, task_name: str, node: str, size: float,
+                              confidence: float = 0.9):
+        i = self._rowmap[task_name]
+        tm = slice_task_model(self._model, i)
+        f = self.est.factor(task_name, node)
+        z = float(_scipy_stats.norm.ppf(0.5 + confidence / 2.0))
+        if tm.correlated:
+            lo, hi = predict_interval(tm.post, size, confidence)
+            lo, hi = float(lo), float(hi)
+        else:
+            lo = tm.median - z * tm.spread
+            hi = tm.median + z * tm.spread
+        s_lo = s_hi = 1.0
+        if self._bias is not None:
+            j = self._bias_col.get(node)
+            if j is not None:
+                s_lo, s_hi = self._bias.interval_scale(i, j, z)
+        return max(lo * f * s_lo, 0.0), hi * f * s_hi
+
+    def predict_pit_node(self, task_name: str, node: str, size: float,
+                         runtime: float) -> float:
+        i = self._rowmap[task_name]
+        tm = slice_task_model(self._model, i)
+        f = max(float(self.est.factor(task_name, node)), 1e-12)
+        b = 1.0
+        if self._bias is not None:
+            j = self._bias_col.get(node)
+            if j is not None:
+                b = self._bias.point(i, j)
+        y_local = float(runtime) / (f * max(b, 1e-12))
+        if tm.correlated:
+            return predict_cdf(tm.post, size, y_local)
+        z = (y_local - tm.median) / max(tm.spread, 1e-300)
+        return float(_scipy_stats.norm.cdf(z))
+
+    def bias_point(self, name: str, node: str) -> float:
+        if self._bias is None:
+            return 1.0
+        j = self._bias_col.get(node)
+        if j is None:
+            return 1.0
+        return self._bias.point(self._rowmap[name], j)
+
+    def bias_tail_mass(self, name: str, node: str,
+                       threshold: float) -> float:
+        if self._bias is None:
+            return 0.0
+        j = self._bias_col.get(node)
+        if j is None:
+            return 0.0
+        return self._bias.tail_mass(self._rowmap[name], j, threshold)
+
+    # ---- reliability plane (host, scheduler-consumed) -----------------
+    def record_attempt(self, node: str, success: bool) -> None:
+        self.est.record_attempt(node, success)
+        self._rel_dirty = True
+
+    def reliability_factors(self, nodes, k: float = 1.0):
+        return self.est.reliability_factors(nodes, k)
+
+    def _sync_reliability(self) -> None:
+        """Mirror the host reliability counts into the state leaves so
+        the consolidated pytree stays authoritative for save/fleet
+        consumers (the tick itself never reads them)."""
+        import dataclasses as _dc
+        rel = self.est.reliability
+        names = self.names
+        if rel is None or not names.rel_nodes:
+            self._rel_dirty = False
+            return
+        dt = self.state.rel_succ.dtype
+        succ = np.zeros(len(names.rel_nodes), np.float64)
+        fail = np.zeros(len(names.rel_nodes), np.float64)
+        for kk, n in enumerate(names.rel_nodes):
+            succ[kk], fail[kk] = rel.counts(n)
+        self.state = _dc.replace(self.state,
+                                 rel_succ=jnp.asarray(succ, dt),
+                                 rel_fail=jnp.asarray(fail, dt))
+        self._rel_dirty = False
+
+    # ---- writeback ----------------------------------------------------
+    def finalize(self) -> None:
+        """Fold the final state back into the wrapped estimator (batch
+        cache, touched scalar models, bias posterior) — after this the
+        legacy OO surface continues bit-compatibly."""
+        if self._rel_dirty:
+            self._sync_reliability()
+        state = EstimatorState(
+            model=self._model, factors=self.state.factors,
+            node_cols=self.state.node_cols,
+            bias_counts=self.state.bias_counts,
+            bias_log_sum=self.state.bias_log_sum,
+            bias_log_sq=self.state.bias_log_sq,
+            rel_succ=self.state.rel_succ, rel_fail=self.state.rel_fail,
+            meta=self.state.meta)
+        write_back(state, self.names, self.est, rows=self._touched)
+        self._touched.clear()

@@ -29,6 +29,21 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     return jax.make_mesh(shape, axes)
 
 
+def make_fleet_mesh(*, wf: int | None = None, task: int = 1):
+    """("wf", "task") mesh for the multi-workflow estimator fleet
+    (``repro.online.fleet``): workflows shard over "wf", task rows over
+    "task".  ``wf`` defaults to all remaining devices after the "task"
+    axis takes ``task``; on a single device this is a (1, 1) mesh and
+    ``shard_fleet`` replicates — the exact single-state layout.
+    """
+    n = len(jax.devices())
+    if n % task != 0:
+        raise ValueError(f"{n} devices not divisible by task={task}")
+    if wf is None:
+        wf = n // task
+    return jax.make_mesh((wf, task), ("wf", "task"))
+
+
 def make_rules(mesh, *, fsdp_over_pod: bool = False,
                overrides: dict | None = None) -> AxisRules:
     """Sharding rules for a mesh.

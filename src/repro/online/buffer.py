@@ -27,11 +27,24 @@ class Observation:
 class ObservationBuffer:
     """Append-only stream of ``Observation``s with replay helpers."""
 
+    #: default tick-grouping tolerance — ``add`` maintains the incremental
+    #: tick index at exactly this atol, so the common ``by_tick()`` call
+    #: never has to re-group the whole stream
+    TICK_ATOL = 1e-12
+
     def __init__(self):
         self._obs: list[Observation] = []
+        self._ticks: list[tuple[float, list[Observation]]] = []
 
     def add(self, obs: Observation) -> None:
         self._obs.append(obs)
+        # grouping is against the FIRST time of the open group (not the
+        # previous observation), matching the legacy one-shot scan exactly
+        if self._ticks and abs(obs.time - self._ticks[-1][0]) <= \
+                self.TICK_ATOL:
+            self._ticks[-1][1].append(obs)
+        else:
+            self._ticks.append((obs.time, [obs]))
 
     def record(self, task: str, node: str, size: float, runtime: float,
                local_runtime: float, time: float = 0.0) -> Observation:
@@ -95,11 +108,20 @@ class ObservationBuffer:
                                 time=float(o.get("time", 0.0))))
         return buf
 
-    def by_tick(self, atol: float = 1e-12) -> list[tuple[float,
+    def by_tick(self, atol: float = TICK_ATOL) -> list[tuple[float,
                                                          list[Observation]]]:
         """Group the stream by completion time (within ``atol``): the
         same-tick batches the executor fed through ``observe_batch`` —
-        replaying tick by tick reproduces the online update sequence."""
+        replaying tick by tick reproduces the online update sequence.
+
+        The default-``atol`` grouping is served from the index ``add``
+        maintains incrementally, so calling this after every completion
+        (the replay-while-running pattern) no longer re-scans the whole
+        stream each time; a non-default ``atol`` falls back to the
+        one-shot scan.  Returned group lists are fresh copies either way.
+        """
+        if atol == self.TICK_ATOL:
+            return [(t, list(g)) for t, g in self._ticks]
         out: list[tuple[float, list[Observation]]] = []
         for o in self._obs:
             if out and abs(o.time - out[-1][0]) <= atol:

@@ -29,7 +29,8 @@ import numpy as np
 
 from repro.obs.calibration import running_median
 from repro.obs.trace import NULL_TRACER
-from repro.sched.heft import SchedTask, heft_schedule_array
+from repro.sched.heft import (SchedTask, _topo_order, heft_schedule_array,
+                              upward_rank_array, upward_rank_incremental)
 from repro.sched.simulator import GridEngine
 
 from .buffer import ObservationBuffer
@@ -269,7 +270,8 @@ class OnlineExecutor:
                  faults=None, max_attempts: int = 4,
                  backoff_base: float = 1.0, backoff_cap: float = 30.0,
                  rel_k: float | None = None, strict: bool = True,
-                 tracer=None):
+                 tracer=None, fused: bool = False,
+                 incremental_replan: bool | None = None):
         if spec_tail is not None and not 0.0 < spec_tail < 1.0:
             raise ValueError(f"spec_tail must be in (0, 1), got {spec_tail}")
         if max_attempts < 1:
@@ -322,6 +324,34 @@ class OnlineExecutor:
         task_rows = {nm: i for i, nm in enumerate(estimator.task_names())}
         for tid, nm in task_name.items():
             self._row[tid] = task_rows[nm]
+        # fused mode: the per-tick estimator surface is served by a
+        # TickEngine (one jitted tick_step per completion batch) instead
+        # of the estimator's host-orchestrated observe/predict sequence;
+        # the final state is written back into the estimator at run end
+        self._engine = None
+        if fused and online:
+            from repro.core.tick import TickEngine
+            self._engine = TickEngine(estimator, self.type_names,
+                                      size=self.size, tracer=self.tracer)
+        self._api = self._engine if self._engine is not None else estimator
+        # incremental re-planning (defaults on with the fused tick):
+        # upward ranks over the FULL instance graph are cached and only
+        # the dirty ancestor chains re-ranked per re-plan — bitwise equal
+        # to the from-scratch rank (oracle-tested), because a successor
+        # of an unstarted task is always itself unstarted
+        self._incremental = ((fused if incremental_replan is None
+                              else incremental_replan) and online)
+        self._ids = list(tasks)
+        self._id_idx = {tid: i for i, tid in enumerate(self._ids)}
+        # edges to ids outside the instance set (external/unsatisfiable
+        # deps) are dropped, exactly like _plan's subgraph build
+        self._succ_full = [[self._id_idx[s] for s in tasks[tid].succ
+                            if s in self._id_idx] for tid in self._ids]
+        self._pred_full = [[self._id_idx[p] for p in tasks[tid].pred
+                            if p in self._id_idx] for tid in self._ids]
+        self._rows_full = np.array([self._row[tid] for tid in self._ids])
+        self._topo_full: list[int] | None = None
+        self._rank_cache: tuple[np.ndarray, np.ndarray] | None = None
 
     def _backoff(self, n_failures: int) -> float:
         """Retry delay after the ``n_failures``-th failure of a task:
@@ -332,8 +362,8 @@ class OnlineExecutor:
     def _rel_factors(self) -> np.ndarray:
         """(N,) per-node-instance reliability price multipliers (all-ones
         when the estimator has no availability plane)."""
-        if hasattr(self.est, "reliability_factors"):
-            return np.asarray(self.est.reliability_factors(
+        if hasattr(self._api, "reliability_factors"):
+            return np.asarray(self._api.reliability_factors(
                 self.node_names, self.rel_k), np.float64)
         return np.ones(len(self.node_names), np.float64)
 
@@ -343,17 +373,57 @@ class OnlineExecutor:
         ``observe`` only the dirty row is recomputed (matrix row cache).
         ``with_std=False`` returns ``(mean, None)`` and skips the bias
         widening — the mean-only fast path a risk-neutral plan takes."""
-        return self.est.predict_matrix(self.type_names, self.size,
-                                       with_std=with_std)
+        return self._api.predict_matrix(self.type_names, self.size,
+                                        with_std=with_std)
+
+    def _incremental_rank(self, unstarted: list[str], mean, std,
+                          rf) -> np.ndarray:
+        """Upward ranks for the unstarted subgraph, refreshed from the
+        cached full-instance-graph ranks instead of recomputed.
+
+        Bitwise equal to the rank ``heft_schedule_array`` would build
+        itself: a task can only start once every predecessor is done, so
+        successors of unstarted tasks are themselves unstarted — the
+        full-graph rank restricted to the frontier IS the subgraph rank.
+        Only instances whose effective mean cost changed since the last
+        plan (plus their ancestor chains) are re-ranked."""
+        eff_abs = mean[:, self._col]
+        if rf is not None:
+            eff_abs = eff_abs * rf[None, :]
+        if self.risk_k > 0:
+            unc_abs = std[:, self._col]
+            if rf is not None:
+                unc_abs = unc_abs * rf[None, :]
+            eff_abs = eff_abs + self.risk_k * unc_abs
+        inst_cost = eff_abs.mean(axis=1)[self._rows_full]
+        if self._rank_cache is None:
+            if self._topo_full is None:
+                self._topo_full = _topo_order(self._succ_full,
+                                              self._pred_full)
+            rank_full = upward_rank_array(self._succ_full,
+                                          self._pred_full, inst_cost)
+        else:
+            prev_cost, prev_rank = self._rank_cache
+            dirty = np.nonzero(inst_cost != prev_cost)[0]
+            rank_full = upward_rank_incremental(
+                self._succ_full, self._pred_full, inst_cost, prev_rank,
+                dirty, topo=self._topo_full)
+        self._rank_cache = (inst_cost, rank_full)
+        return rank_full[[self._id_idx[tid] for tid in unstarted]]
 
     def _plan(self, unstarted: list[str], t_now: float,
-              ext_finish: dict[str, float]) -> dict[str, list[str]]:
+              ext_finish: dict[str, float],
+              frontier_exact: bool = True) -> dict[str, list[str]]:
         """(Re-)plan the not-yet-started frontier; returns per-node queues.
 
         ``ext_finish`` maps done/running predecessors to their (actual or
         expected) finish times — they become ``task_ready`` floors, and the
         grid's busy-until times become ``node_ready`` floors, so the plan
-        never assumes a busy node or an unfinished input."""
+        never assumes a busy node or an unfinished input.
+        ``frontier_exact`` asserts ``unstarted`` is the complete
+        never-started remainder of the DAG (no stranded holes) — the
+        precondition for the incremental rank reuse; callers that dropped
+        stranded tasks pass False and take the from-scratch rank."""
         if not unstarted:
             return {n: [] for n in self.node_names}
         # risk-neutral plans consume only the means: skip the bias-widened
@@ -367,15 +437,17 @@ class OnlineExecutor:
         rows = np.array([self._row[tid] for tid in unstarted])
         cost = mean[rows][:, self._col]
         unc = std[rows][:, self._col] if self.risk_k > 0 else None
-        if self.rel_k is not None:
+        rf = self._rel_factors() if self.rel_k is not None else None
+        if rf is not None:
             # availability pricing: each node-instance column is scaled
             # by its expected time-to-success multiplier, so the same
             # mean runtime on a flaky node costs more end to end (rank
             # AND placement, like risk_k)
-            rf = self._rel_factors()
             cost = cost * rf[None, :]
             if unc is not None:
                 unc = unc * rf[None, :]
+        rank = (self._incremental_rank(unstarted, mean, std, rf)
+                if self._incremental and frontier_exact else None)
         task_ready = np.array([
             max((ext_finish.get(p, t_now)
                  for p in self.tasks[tid].pred if p not in idx),
@@ -389,7 +461,7 @@ class OnlineExecutor:
             sched = heft_schedule_array(
                 succ, pred, cost, unc, self.risk_k,
                 node_ready=self.grid.ready_vector(t_now),
-                task_ready=task_ready)
+                task_ready=task_ready, rank=rank)
         queues: dict[str, list[str]] = {n: [] for n in self.node_names}
         for i in sched["order"]:
             queues[self.node_names[sched["assignment"][i]]].append(
@@ -507,7 +579,7 @@ class OnlineExecutor:
                 tr.emit("fault", t_sim=t_now, task=tid, node=node,
                         reason=reason, elapsed=t_now - start)
             if self._track_rel:
-                self.est.record_attempt(node, False)
+                self._api.record_attempt(node, False)
 
         def lose_attempt(tid: str, att_seq: int, t_now: float,
                          reason: str) -> bool:
@@ -588,7 +660,8 @@ class OnlineExecutor:
             ext = {**done, **{k: max(v, t_now)
                               for k, v in expected_finish.items()
                               if k not in done}}
-            queues = self._plan(unstarted, t_now, ext)
+            queues = self._plan(unstarted, t_now, ext,
+                                frontier_exact=not stranded)
             trace.replans += 1
 
         def node_down(node: str, t_now: float) -> None:
@@ -634,8 +707,8 @@ class OnlineExecutor:
             when ``spec_tail`` is set — the posterior tail mass
             ``P(bias > bias_drift) >= spec_tail``, which no single noisy
             residual can satisfy."""
-            bias_point = getattr(self.est, "bias_point", None)
-            tail_mass = getattr(self.est, "bias_tail_mass", None)
+            bias_point = getattr(self._api, "bias_point", None)
+            tail_mass = getattr(self._api, "bias_tail_mass", None)
             if self.spec_tail is not None:
                 if tail_mass is None:
                     return
@@ -766,7 +839,7 @@ class OnlineExecutor:
                     trace.records[rec_idx[ctid]] = sr
                     trace.spec_wins += 1
                 if self._track_rel:
-                    self.est.record_attempt(cnode, True)
+                    self._api.record_attempt(cnode, True)
                 if tr.enabled:
                     crec = trace.records[rec_idx[ctid]]
                     tr.emit("finish", t_sim=cend, task=ctid,
@@ -780,12 +853,12 @@ class OnlineExecutor:
                 # tick-start belief) considered likely?
                 batch = []
                 gates = []
-                pit_of = getattr(self.est, "predict_pit_node", None)
+                pit_of = getattr(self._api, "predict_pit_node", None)
                 for ctid, cnode, _ in completions:
                     run = trace.records[rec_idx[ctid]]
                     name = self.task_name[ctid]
                     ntype = self.grid.type_of(cnode).name
-                    lo, hi = self.est.predict_interval_node(
+                    lo, hi = self._api.predict_interval_node(
                         name, ntype, self.size, self.confidence)
                     gate = not (lo <= run.runtime <= hi)
                     gates.append(gate)
@@ -806,7 +879,7 @@ class OnlineExecutor:
                             tr.emit("surprise", t_sim=t, task=ctid,
                                     name=name, node_type=ntype,
                                     runtime=run.runtime, lo=lo, hi=hi)
-                local_rts = self.est.observe_batch(batch)
+                local_rts = self._api.observe_batch(batch)
                 for (name, ntype, _, runtime), local_rt in zip(batch,
                                                                local_rts):
                     trace.observations.record(name, ntype, self.size,
@@ -823,7 +896,8 @@ class OnlineExecutor:
                     ext = {**done, **{k: max(v, t)
                                       for k, v in expected_finish.items()
                                       if k not in done}}
-                    queues = self._plan(unstarted, t, ext)
+                    queues = self._plan(unstarted, t, ext,
+                                        frontier_exact=not stranded)
                     trace.replans += 1
                     cooldown = self.replan_cooldown
                 if self.speculate:
@@ -843,6 +917,11 @@ class OnlineExecutor:
                     speculations=trace.speculations,
                     spec_wins=trace.spec_wins, failures=trace.failures,
                     retries=trace.retries, mpe=trace.final_mpe())
+        if self._engine is not None:
+            # fold the device-resident state back into the estimator so
+            # the OO surface (scalar predicts, save/load) picks up from
+            # exactly where the fused ticks left off
+            self._engine.finalize()
         return trace
 
 

@@ -1,0 +1,252 @@
+"""Multi-workflow fleet: a leading ``(W,)`` axis over ``EstimatorState``.
+
+The fused tick (``repro.core.tick``) made one estimator's whole
+observe → update → bias scatter → re-predict sequence a single jitted
+dispatch over an ``EstimatorState`` pytree.  This module lifts that to a
+fleet of W concurrent workflows: per-workflow states are padded to a
+common ``(T, N)`` envelope, stacked leaf-wise into one ``FleetState``
+whose every array leaf carries a leading workflow axis, and advanced by
+``fleet_tick_step`` — ``jax.vmap`` of the SAME ``_tick_core`` the
+single-workflow path jits, so the fleet semantics are the per-workflow
+semantics by construction (property-tested in ``tests/test_fleet.py``).
+
+Sharding: ``repro.launch.mesh.make_fleet_mesh`` builds a ``("wf",
+"task")`` mesh and ``shard_fleet`` lays the stacked leaves out with
+``jax.sharding.NamedSharding`` — workflows over the "wf" axis, task rows
+over "task".  On a single device the mesh is (1, 1) and every spec is
+fully replicated: the layout degrades to exactly today's single-state
+arrays, with no resharding and no layout change.
+
+Padding values are chosen inert, not just ignored: padded observation
+rows carry ``valid = 0`` (the masked scan keeps the model bitwise
+unchanged), padded task rows get an identity posterior whose fold output
+is finite, and padded node columns sit outside the bias universe
+(``node_cols = -1``).  Consumers slice real cells back out with
+``fleet_slice``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax import numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.core.blr import (BatchedTaskModel, BLRPosterior, OnlineStats,
+                            _default_dtype)
+from repro.core.state import EstimatorState, StateMeta
+from repro.core.tick import _predict_state_core, _tick_core
+
+#: columns of one packed observation row (see ``core.tick._tick_core``)
+OBS_WIDTH = 8
+
+
+@dataclass(frozen=True)
+class FleetState:
+    """W stacked estimator states plus their real (unpadded) extents.
+
+    ``state``'s array leaves all carry a leading ``(W,)`` axis;
+    ``t_count`` / ``n_count`` record how many task rows / node columns of
+    each workflow's padded envelope are real.
+    """
+    state: EstimatorState
+    t_count: jnp.ndarray     # (W,) int32 real task rows per workflow
+    n_count: jnp.ndarray     # (W,) int32 real node columns per workflow
+
+
+jax.tree_util.register_dataclass(
+    FleetState, data_fields=["state", "t_count", "n_count"], meta_fields=[])
+
+
+def pad_state(state: EstimatorState, t_pad: int, n_pad: int,
+              nb_pad: int | None = None) -> EstimatorState:
+    """Grow a state's envelope to ``(t_pad, n_pad)`` task/node extents
+    (and ``nb_pad`` bias columns, default ``n_pad``) with inert filler:
+    padded rows are uncorrelated identity posteriors with zero
+    median/moments, padded factors are 1, padded node columns map to no
+    bias column.  Real cells are byte-identical to the input."""
+    model = state.model
+    t0 = int(model.median.shape[-1])
+    n0 = int(state.factors.shape[-1])
+    nb0 = int(state.bias_counts.shape[-1])
+    nb_pad = n_pad if nb_pad is None else nb_pad
+    if t_pad < t0 or n_pad < n0 or nb_pad < nb0:
+        raise ValueError(
+            f"pad_state cannot shrink: have (T={t0}, N={n0}, Nb={nb0}), "
+            f"asked for (T={t_pad}, N={n_pad}, Nb={nb_pad})")
+    dt = state.factors.dtype
+    te = t_pad - t0
+
+    def row_pad(x, value=0.0):
+        """Pad the leading task axis of a (T, ...) leaf with ``value``."""
+        widths = [(0, te)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, widths, constant_values=value)
+
+    p = model.post
+    eye = jnp.broadcast_to(jnp.eye(2, dtype=dt), (te, 2, 2))
+    post = BLRPosterior(
+        mu=row_pad(p.mu), V=jnp.concatenate([p.V, eye], axis=0),
+        a=row_pad(p.a, 1.5), b=row_pad(p.b, 1.0),
+        x_scale=row_pad(p.x_scale, 1.0), y_scale=row_pad(p.y_scale, 1.0))
+    stats = (None if model.stats is None else
+             OnlineStats(moments=row_pad(model.stats.moments), log=None))
+    padded_model = BatchedTaskModel(
+        correlated=row_pad(model.correlated, False), post=post,
+        median=row_pad(model.median), spread=row_pad(model.spread),
+        stats=stats)
+
+    def grid_pad(x, value=0.0):
+        return jnp.pad(x, [(0, te), (0, nb_pad - nb0)],
+                       constant_values=value)
+
+    factors = jnp.pad(state.factors, [(0, te), (0, n_pad - n0)],
+                      constant_values=1.0)
+    node_cols = jnp.pad(state.node_cols, (0, n_pad - n0),
+                        constant_values=-1)
+    return EstimatorState(
+        model=padded_model, factors=factors, node_cols=node_cols,
+        bias_counts=grid_pad(state.bias_counts),
+        bias_log_sum=grid_pad(state.bias_log_sum),
+        bias_log_sq=grid_pad(state.bias_log_sq),
+        rel_succ=state.rel_succ, rel_fail=state.rel_fail, meta=state.meta)
+
+
+def stack_states(states) -> FleetState:
+    """Pad each workflow's state to the common envelope and stack every
+    array leaf along a new leading ``(W,)`` axis.
+
+    All states must share one ``StateMeta`` (the hyperparameters are the
+    compiled tick's specialisation key — workflows with different bias
+    decay cannot ride one vmap) and one reliability slot count.
+    """
+    states = list(states)
+    if not states:
+        raise ValueError("stack_states needs at least one state")
+    meta = states[0].meta
+    for s in states[1:]:
+        if s.meta != meta:
+            raise ValueError(
+                "fleet states must share StateMeta hyperparameters: "
+                f"{s.meta} != {meta}")
+    r_counts = {int(s.rel_succ.shape[0]) for s in states}
+    if len(r_counts) > 1:
+        raise ValueError(
+            f"fleet states must share the reliability slot count, "
+            f"got {sorted(r_counts)}")
+    t_pad = max(int(s.model.median.shape[-1]) for s in states)
+    n_pad = max(int(s.factors.shape[-1]) for s in states)
+    nb_pad = max(max((int(s.bias_counts.shape[-1]) for s in states),
+                     default=0), n_pad)
+    t_count = jnp.asarray([int(s.model.median.shape[-1]) for s in states],
+                          jnp.int32)
+    n_count = jnp.asarray([int(s.factors.shape[-1]) for s in states],
+                          jnp.int32)
+    padded = []
+    for s in states:
+        s = pad_state(s, t_pad, n_pad, nb_pad)
+        if s.model.stats is not None and s.model.stats.log is not None:
+            # the host-side raw-sample log is pytree meta: stacked states
+            # must agree on it, and the fleet never reads it — strip it
+            s = dataclasses.replace(
+                s, model=dataclasses.replace(
+                    s.model, stats=OnlineStats(
+                        moments=s.model.stats.moments, log=None)))
+        padded.append(s)
+    stacked = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *padded)
+    return FleetState(state=stacked, t_count=t_count, n_count=n_count)
+
+
+def _fleet_tick_core(fleet: FleetState, obs, sizes):
+    """One fused tick for every workflow at once.
+
+    ``obs`` is (W, B, 8) packed observation rows — pad a workflow's short
+    tick with ``valid = 0`` rows (``pad_obs``); ``sizes`` is the (W,)
+    per-workflow prediction input size.  Returns ``(fleet', mean, std)``
+    with (W, T, N) estimate matrices.
+    """
+    step = jax.vmap(
+        lambda s, o, z: _tick_core(s, o, z, host_deadjust=False))
+    new_state, mean, std, _y = step(fleet.state, obs, sizes)
+    return (FleetState(state=new_state, t_count=fleet.t_count,
+                       n_count=fleet.n_count), mean, std)
+
+
+def _fleet_predict_core(fleet: FleetState, sizes):
+    mean, std = jax.vmap(_predict_state_core)(fleet.state, sizes)
+    return mean, std
+
+
+#: the fleet tick / predict entry points — the donated fleet buffers are
+#: consumed in place, one compile per (W, B, T, N) envelope
+fleet_tick_step = jax.jit(_fleet_tick_core, donate_argnums=(0,))
+fleet_predict = jax.jit(_fleet_predict_core)
+
+
+def pad_obs(obs_rows, batch: int):
+    """Pack one workflow's tick observations (each an 8-wide row, see
+    ``core.tick``) into a fixed (batch, 8) block, padding with
+    ``valid = 0`` rows that the masked scan ignores."""
+    dt = _default_dtype()
+    out = np.zeros((batch, OBS_WIDTH), np.float64)
+    rows = np.asarray(obs_rows, np.float64)
+    if rows.size:
+        if rows.shape[0] > batch:
+            raise ValueError(
+                f"tick has {rows.shape[0]} observations, envelope is "
+                f"{batch} — raise the fleet batch size")
+        out[:rows.shape[0]] = rows
+    return jnp.asarray(out, dt)
+
+
+def fleet_slice(arr, fleet: FleetState, w: int) -> np.ndarray:
+    """Workflow ``w``'s real (unpadded) cells of a (W, T, N) fleet
+    output, as a host array."""
+    t = int(fleet.t_count[w])
+    n = int(fleet.n_count[w])
+    return np.asarray(arr[w])[:t, :n]
+
+
+def fleet_pspecs(fleet: FleetState, mesh) -> FleetState:
+    """Partition specs for every leaf of a ``FleetState``: workflows over
+    the mesh's "wf" axis, task rows over "task" where a leaf has a task
+    axis, everything else replicated.  Built structurally (field by
+    field), not by shape sniffing — T and N extents can coincide."""
+    names = mesh.axis_names
+    wf = PartitionSpec("wf") if "wf" in names else PartitionSpec()
+    wt = (PartitionSpec("wf", "task") if "wf" in names and "task" in names
+          else wf)
+    st = fleet.state
+    post = BLRPosterior(mu=wt, V=wt, a=wt, b=wt, x_scale=wt, y_scale=wt)
+    stats = (None if st.model.stats is None
+             else OnlineStats(moments=wt, log=None))
+    model = BatchedTaskModel(correlated=wt, post=post, median=wt,
+                             spread=wt, stats=stats)
+    state = EstimatorState(
+        model=model, factors=wt, node_cols=wf, bias_counts=wt,
+        bias_log_sum=wt, bias_log_sq=wt, rel_succ=wf, rel_fail=wf,
+        meta=st.meta)
+    return FleetState(state=state, t_count=wf, n_count=wf)
+
+
+def shard_fleet(fleet: FleetState, mesh) -> FleetState:
+    """Lay a stacked fleet out over ``mesh`` with ``NamedSharding``.
+
+    Axis extents must divide the mesh ("wf" | W, "task" | T) — raises
+    with the offending extents otherwise.  A (1, 1) mesh (single device)
+    replicates everything: bit-identical to the unsharded layout.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    w = int(fleet.t_count.shape[0])
+    t = int(fleet.state.model.median.shape[-1])
+    if "wf" in sizes and w % sizes["wf"] != 0:
+        raise ValueError(f"fleet W={w} not divisible by mesh wf axis "
+                         f"({sizes['wf']})")
+    if "task" in sizes and t % sizes["task"] != 0:
+        raise ValueError(f"fleet T={t} not divisible by mesh task axis "
+                         f"({sizes['task']})")
+    specs = fleet_pspecs(fleet, mesh)
+    return jax.tree_util.tree_map(
+        lambda leaf, spec: jax.device_put(leaf, NamedSharding(mesh, spec)),
+        fleet, specs)

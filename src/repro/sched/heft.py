@@ -77,12 +77,50 @@ def upward_rank_array(succ: list[list[int]], pred: list[list[int]],
     return rank
 
 
+def upward_rank_incremental(succ: list[list[int]], pred: list[list[int]],
+                            mean_cost: np.ndarray, prev_rank: np.ndarray,
+                            dirty, comm: float = 0.0,
+                            topo: list[int] | None = None) -> np.ndarray:
+    """Refresh an upward rank after a sparse cost change — bitwise equal
+    to recomputing ``upward_rank_array`` from scratch (test-enforced
+    oracle, see ``tests/test_scheduler.py``).
+
+    ``dirty`` indexes the tasks whose ``mean_cost`` changed since
+    ``prev_rank`` was computed.  A task's rank depends only on its own
+    cost and its successors' ranks, so the stale entries are exactly
+    ``dirty`` plus its ancestor closure — everything else is carried
+    over.  The online executor's re-plan path uses this: a tick dirties
+    only the observed rows' instances, so the re-rank touches the
+    affected ancestor chains instead of the whole DAG (``topo`` can be
+    passed in to amortise the one remaining O(T) pass)."""
+    if topo is None:
+        topo = _topo_order(succ, pred)
+    affected = {int(d) for d in np.asarray(dirty).ravel()}
+    stack = list(affected)
+    while stack:
+        t = stack.pop()
+        for p in pred[t]:
+            if p not in affected:
+                affected.add(p)
+                stack.append(p)
+    rank = np.array(prev_rank, np.float64, copy=True)
+    for t in reversed(topo):
+        if t not in affected:
+            continue
+        best = 0.0
+        for s in succ[t]:
+            best = max(best, comm + rank[s])
+        rank[t] = mean_cost[t] + best
+    return rank
+
+
 def heft_schedule_array(succ: list[list[int]], pred: list[list[int]],
                         cost: np.ndarray,
                         uncertainty: np.ndarray | None = None,
                         risk_k: float = 0.0,
                         node_ready: np.ndarray | None = None,
-                        task_ready: np.ndarray | None = None) -> dict:
+                        task_ready: np.ndarray | None = None,
+                        rank: np.ndarray | None = None) -> dict:
     """HEFT over a (T, N) cost matrix — the ndarray fast path.
 
     ``succ`` / ``pred`` are index-based adjacency lists; ``cost[t, n]`` the
@@ -98,13 +136,22 @@ def heft_schedule_array(succ: list[list[int]], pred: list[list[int]],
     busy until node_ready[j], task t's external predecessors (already
     done or running) finish at task_ready[t].  Returns index-based
     arrays: {assignment (T,) int, start (T,), finish (T,), makespan,
-    order (T,) int}."""
+    order (T,) int}.
+
+    ``rank`` short-circuits the internal upward-rank pass with a
+    caller-maintained priority vector (e.g. an incrementally refreshed
+    ``upward_rank_incremental`` slice) — it must equal what
+    ``upward_rank_array`` would compute over this subgraph for the
+    schedule to be unchanged."""
     cost = np.asarray(cost, np.float64)
     T, N = cost.shape
     eff = cost
     if uncertainty is not None and risk_k > 0:
         eff = cost + risk_k * np.asarray(uncertainty, np.float64)
-    rank = upward_rank_array(succ, pred, eff.mean(axis=1))
+    if rank is None:
+        rank = upward_rank_array(succ, pred, eff.mean(axis=1))
+    else:
+        rank = np.asarray(rank, np.float64)
     order = np.argsort(-rank, kind="stable")
     node_free = (np.zeros(N) if node_ready is None
                  else np.asarray(node_ready, np.float64).copy())

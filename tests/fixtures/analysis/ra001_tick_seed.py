@@ -1,0 +1,39 @@
+"""RA001 fixture: the fused-tick seed list (`_SEED_TRACED`).
+
+These defs carry NO visible jit/vmap plumbing — they are traced purely
+by the seed-list contract (the real kernels' wrapping can move behind a
+factory).  Line numbers are asserted exactly in
+tests/test_analysis_lint.py — append new cases at the end or renumber
+the expectations.
+"""
+import jax.numpy as jnp
+
+TICK_LOG = []
+CACHE = {}
+
+
+def _tick_core(state, obs):
+    print("ticking", obs)          # line 16: RA001 print in seeded kernel
+    return state
+
+
+def tick_step(state, obs):
+    TICK_LOG.append(obs)           # line 21: RA001 captured mutation
+    return _helper(state, obs)
+
+
+def _helper(state, obs):
+    # transitively traced: called by name from seeded `tick_step`
+    return float(obs) + 1.0        # line 27: RA001 float() on traced param
+
+
+def _fleet_tick_core(fleet, obs):
+    CACHE["last"] = obs            # line 31: RA001 captured subscript store
+    return fleet
+
+
+def plain_host_helper(obs):
+    # negative control: NOT seeded, NOT called from a traced def —
+    # host-side prints here are fine and must stay unflagged
+    print("host summary", obs)
+    return jnp.asarray(obs)

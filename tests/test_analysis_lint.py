@@ -35,6 +35,22 @@ def test_ra001_exact_lines():
     assert {d.rule for d in diags} == {"RA001"}
 
 
+def test_ra001_seed_list_exact_lines():
+    # the fused-tick kernels are traced by CONTRACT (`_SEED_TRACED`):
+    # no visible jit/vmap plumbing in the fixture, yet every planted
+    # violation fires — incl. transitively through a same-file call
+    diags = lint("ra001_tick_seed.py")
+    assert rule_lines(diags, "RA001") == [16, 21, 27, 31]
+    assert {d.rule for d in diags} == {"RA001"}
+
+
+def test_ra001_seed_list_negative_control():
+    # a def NOT on the seed list (and not called from one) keeps its
+    # host-side print: seeding must not blanket the whole module
+    diags = lint("ra001_tick_seed.py")
+    assert 38 not in rule_lines(diags, "RA001")
+
+
 def test_ra001_local_float_not_flagged():
     # float(y) on a local intermediate (bad_sync, line 22) must NOT fire:
     # the heuristic only flags syncs rooted at traced parameters

@@ -477,9 +477,9 @@ def test_stall_nonstrict_strands_instead_of_raising():
 
 
 # ---------------------------------------------------------------------------
-# Persistence: schema v5 round trip, older files still load
+# Persistence: reliability (v5) round trip, older files still load
 # ---------------------------------------------------------------------------
-def test_schema_v5_roundtrips_reliability(tmp_path):
+def test_schema_roundtrips_reliability(tmp_path):
     est, _ = _make_est()
     est.record_attempt("tpu-v2/0", False)
     est.record_attempt("tpu-v2/0", True)
@@ -487,7 +487,7 @@ def test_schema_v5_roundtrips_reliability(tmp_path):
     p = tmp_path / "est.json"
     est.save(p)
     d = json.loads(p.read_text())
-    assert d["version"] == SCHEMA_VERSION == 5
+    assert d["version"] == SCHEMA_VERSION == 6
     assert d["reliability"]["state"]["tpu-v2/0"] == [1.0, 1.0]
     loaded = LotaruEstimator.load(p)
     assert loaded.reliability is not None

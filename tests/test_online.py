@@ -299,6 +299,38 @@ def test_observation_buffer_by_tick_groups_same_time():
     assert {o.task for o in ticks[0][1]} == {"a", "b"}
 
 
+def test_observation_buffer_by_tick_index_matches_full_scan():
+    """Regression for the incremental tick index: the default-atol fast
+    path (served from the index ``add`` maintains) must equal the legacy
+    one-shot scan EXACTLY — same boundaries, same grouping-against-first
+    semantics — including after a ``from_dict`` round trip."""
+    rng = np.random.default_rng(42)
+    buf = ObservationBuffer()
+    t = 0.0
+    for i in range(200):
+        # mix of exact-repeat ticks, sub-atol nudges, and real advances
+        r = rng.random()
+        if r < 0.4 and i:
+            pass                                   # same tick, exactly
+        elif r < 0.55 and i:
+            t += 0.4e-12                           # within atol of first
+        else:
+            t += float(rng.uniform(0.1, 2.0))
+        buf.record(f"t{i % 7}", f"n{i % 3}", 8.0, 10.0 + i, 5.0 + i,
+                   time=t)
+    fast = buf.by_tick()
+    # the non-default-atol branch is the legacy full scan verbatim
+    slow = buf.by_tick(atol=np.nextafter(buf.TICK_ATOL, 0.0))
+    assert [tt for tt, _ in fast] == [tt for tt, _ in slow]
+    assert [g for _, g in fast] == [g for _, g in slow]
+    # round-tripping through from_dict rebuilds the same index
+    again = ObservationBuffer.from_dict(buf.to_dict()).by_tick()
+    assert again == fast
+    # returned groups are copies, not views of the index
+    fast[0][1].clear()
+    assert [len(g) for _, g in buf.by_tick()] == [len(g) for _, g in slow]
+
+
 # ---------------------------------------------------------------------------
 # Event-driven executor
 # ---------------------------------------------------------------------------

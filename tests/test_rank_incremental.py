@@ -1,0 +1,78 @@
+"""Incremental upward-rank oracle (PR 9).
+
+``upward_rank_incremental`` reuses the previous full-graph ranks and
+recomputes only dirty instances plus their ancestor closure; its output
+must be BITWISE equal to ``upward_rank_array`` from scratch — the
+executor's incremental re-plan rests on this (and on frontier
+exactness, proven by the bitwise executor test in
+``tests/test_tick_engine.py``).  Deterministic seeds, no hypothesis: the
+oracle must hold in every environment CI runs.
+"""
+import numpy as np
+import pytest
+
+from repro.sched.heft import (_topo_order, heft_schedule_array,
+                              upward_rank_array, upward_rank_incremental)
+
+
+def _random_dag(rng, n):
+    succ = [[] for _ in range(n)]
+    pred = [[] for _ in range(n)]
+    for i in range(n):
+        for j in range(i + 1, n):
+            if rng.random() < 0.3:
+                succ[i].append(j)
+                pred[j].append(i)
+    return succ, pred
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_incremental_rank_equals_full_recompute(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 30))
+    succ, pred = _random_dag(rng, n)
+    cost = rng.uniform(1.0, 100.0, n)
+    rank = upward_rank_array(succ, pred, cost)
+    topo = _topo_order(succ, pred)
+    for _ in range(5):
+        cost = cost.copy()
+        n_dirty = int(rng.integers(0, n + 1))
+        dirty = rng.choice(n, size=n_dirty, replace=False)
+        cost[dirty] = rng.uniform(1.0, 100.0, n_dirty)
+        oracle = upward_rank_array(succ, pred, cost)
+        rank = upward_rank_incremental(succ, pred, cost, rank, dirty,
+                                       topo=topo)
+        assert np.array_equal(rank, oracle)      # bitwise, not approx
+
+
+def test_incremental_rank_empty_dirty_is_identity():
+    rng = np.random.default_rng(99)
+    succ, pred = _random_dag(rng, 15)
+    cost = rng.uniform(1.0, 100.0, 15)
+    rank = upward_rank_array(succ, pred, cost)
+    out = upward_rank_incremental(succ, pred, cost, rank, np.array([], int))
+    assert np.array_equal(out, rank)
+    assert out is not rank                       # no aliasing of the cache
+
+
+def test_incremental_rank_comm_term():
+    # a -> b -> c chain with communication cost folded into the max
+    succ, pred = [[1], [2], []], [[], [0], [1]]
+    cost = np.array([5.0, 3.0, 2.0])
+    full = upward_rank_array(succ, pred, cost, comm=1.5)
+    inc = upward_rank_incremental(succ, pred, cost,
+                                  np.zeros(3), np.arange(3), comm=1.5)
+    assert np.array_equal(inc, full)
+    assert full[0] == 5.0 + 1.5 + 3.0 + 1.5 + 2.0
+
+
+def test_heft_schedule_array_accepts_precomputed_rank():
+    rng = np.random.default_rng(5)
+    succ, pred = _random_dag(rng, 12)
+    cost = rng.uniform(1.0, 100.0, (12, 3))
+    internal = heft_schedule_array(succ, pred, cost)
+    rank = upward_rank_array(succ, pred, cost.mean(axis=1))
+    external = heft_schedule_array(succ, pred, cost, rank=rank)
+    assert np.array_equal(internal["order"], external["order"])
+    assert np.array_equal(internal["assignment"], external["assignment"])
+    assert internal["makespan"] == external["makespan"]

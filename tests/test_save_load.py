@@ -89,6 +89,56 @@ def test_roundtrip_after_online_observations(tmp_path):
     np.testing.assert_allclose(M0, M1, rtol=5e-4, atol=1e-5)
 
 
+def test_v6_state_block_primes_batch_cache_moment_exact(tmp_path):
+    """v6 persists the streamed (T, 8) moments and the stacked posterior:
+    the loaded estimator's batched model must be BIT-exact to the saved
+    one (a refit from raw samples sums in a different order), without
+    triggering a refit."""
+    est = _fitted(seed=5)
+    node = list(est.target_benches)[0]
+    for k in range(6):
+        est.observe("lin1", node, 48.0 + k, 530.0 + 7 * k)
+    names0, model0, w0 = est._batched()
+    p = tmp_path / "est.json"
+    est.save(p)
+    d = json.loads(p.read_text())
+    assert d["state"] is not None and d["state"]["tasks"] == names0
+    loaded = LotaruEstimator.load(p)
+    assert loaded._batch_cache is not None      # primed, not lazily refit
+    names1, model1, w1 = loaded._batched()
+    assert names1 == names0 and np.array_equal(w1, w0)
+    assert np.array_equal(np.asarray(model1.stats.moments),
+                          np.asarray(model0.stats.moments))
+    for f0, f1 in [(model0.post.mu, model1.post.mu),
+                   (model0.post.V, model1.post.V),
+                   (model0.post.a, model1.post.a),
+                   (model0.post.b, model1.post.b),
+                   (model0.median, model1.median),
+                   (model0.spread, model1.spread),
+                   (model0.correlated, model1.correlated)]:
+        assert np.array_equal(np.asarray(f0), np.asarray(f1))
+    # the rebuilt raw-sample log carries every streamed observation
+    log = model1.stats.log
+    i = names1.index("lin1")
+    assert int(log.count[i]) == len(loaded.tasks["lin1"].sizes)
+
+
+def test_v5_file_without_state_block_still_loads(tmp_path):
+    est = _fitted(seed=6)
+    p = tmp_path / "v5.json"
+    est.save(p)
+    d = json.loads(p.read_text())
+    d["version"] = 5
+    del d["state"]
+    p.write_text(json.dumps(d))
+    loaded = LotaruEstimator.load(p)
+    assert loaded._batch_cache is None          # refit path, as before v6
+    nodes = list(est.target_benches)
+    M0, _ = est.predict_matrix(nodes, 40.0)
+    M1, _ = loaded.predict_matrix(nodes, 40.0)
+    np.testing.assert_allclose(M0, M1, rtol=5e-4, atol=1e-6)
+
+
 def test_legacy_v1_file_still_loads(tmp_path):
     est = _fitted(seed=4)
     p = tmp_path / "v1.json"

@@ -5,8 +5,9 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dev dep; skip, don't die
 from hypothesis import given, settings, strategies as st
 
-from repro.sched.heft import (SchedTask, heft_schedule, reschedule_elastic,
-                              detect_stragglers)
+from repro.sched.heft import (SchedTask, _topo_order, heft_schedule,
+                              reschedule_elastic, detect_stragglers,
+                              upward_rank_array, upward_rank_incremental)
 
 
 def _random_dag(rng, n_tasks, n_nodes):
@@ -131,3 +132,37 @@ def test_straggler_kill_frees_node_at_detection_time():
     # 10.3 so b runs 10.3 -> 20.3; the old min(orig_ft, alt_ft) rule
     # would have held fast/0 until 20.3 and pushed b to 30.3
     assert r["makespan"] == pytest.approx(20.3, abs=1e-6)
+
+
+def _index_dag(rng, n_tasks):
+    succ = [[] for _ in range(n_tasks)]
+    pred = [[] for _ in range(n_tasks)]
+    for i in range(n_tasks):
+        for j in range(i + 1, n_tasks):
+            if rng.random() < 0.25:
+                succ[i].append(j)
+                pred[j].append(i)
+    return succ, pred
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 24),
+       st.floats(0.0, 1.0), st.integers(1, 4))
+def test_incremental_rank_oracle_random_dags(seed, n_tasks, dirty_frac,
+                                             rounds):
+    """Property twin of tests/test_rank_incremental.py: over random DAGs
+    and dirty sets of every density, the incremental rank is BITWISE the
+    from-scratch rank."""
+    rng = np.random.default_rng(seed)
+    succ, pred = _index_dag(rng, n_tasks)
+    cost = rng.uniform(1.0, 100.0, n_tasks)
+    rank = upward_rank_array(succ, pred, cost)
+    topo = _topo_order(succ, pred)
+    for _ in range(rounds):
+        cost = cost.copy()
+        k = int(round(dirty_frac * n_tasks))
+        dirty = rng.choice(n_tasks, size=k, replace=False)
+        cost[dirty] = rng.uniform(1.0, 100.0, k)
+        rank = upward_rank_incremental(succ, pred, cost, rank, dirty,
+                                       topo=topo)
+        assert np.array_equal(rank, upward_rank_array(succ, pred, cost))

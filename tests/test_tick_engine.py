@@ -1,0 +1,209 @@
+"""Equivalence spine of the fused tick (PR 9).
+
+The array-native tick engine (``repro.core.tick``) must be a pure
+refactor of the legacy observe → update → bias scatter → re-predict
+sequence: every number the executor consumes (estimate matrices,
+surprise intervals, PIT values, bias points, writeback posteriors) has
+to match the OO path to <= 1e-12.  These tests run under x64 — the bar
+is algorithmic identity, not float32 noise — via a module fixture that
+flips ``jax_enable_x64`` and clears every jit cache on both edges.
+
+The executor-level spine drives all five paper workflows, faults off
+AND on, through a fused and a legacy executor built from identical
+seeds, and requires the full trace signatures (assignment, start/end,
+dispatch-time predictions, replan/surprise counters) to agree.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (LotaruEstimator, build_state, get_node,
+                        profile_cluster, profile_node, target_nodes)
+from repro.core.tick import TickEngine, predict_state, tick_step
+from repro.online import OnlineExecutor, fanout_chain_dag
+from repro.sched.simulator import (ClusterSimulator, FaultInjector,
+                                   GridEngine)
+from repro.sched.workflows import INPUTS, WORKFLOWS
+
+TOL = 1e-12
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _x64():
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    jax.clear_caches()
+    yield
+    jax.config.update("jax_enable_x64", prev)
+    jax.clear_caches()
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    local = get_node("local-cpu")
+    local_bench = profile_node(local, np.random.default_rng(7))
+    tbenches = profile_cluster(target_nodes(), seed=13)
+    return local, local_bench, tbenches
+
+
+def _fitted(cluster, wf: str, size: float, *, seed=0):
+    local, local_bench, tbenches = cluster
+    by_name = {t.name: t for t in WORKFLOWS[wf]}
+    sim = ClusterSimulator(seed=seed)
+    est = LotaruEstimator(local_bench, tbenches, bias_correction=True,
+                          bias_empirical_bayes=True)
+    est.fit_tasks(list(by_name), size,
+                  lambda n, s, cf: sim.run_task(by_name[n], local, s,
+                                                cpu_factor=cf))
+    return est, by_name
+
+
+# ---------------------------------------------------------------------------
+# tick-level: TickEngine vs the legacy estimator, one surface at a time
+# ---------------------------------------------------------------------------
+def test_tick_engine_matches_legacy_observe_batch(cluster):
+    wf, size = "eager", INPUTS[("eager", 1)]
+    est_a, by_name = _fitted(cluster, wf, size)
+    est_b, _ = _fitted(cluster, wf, size)
+    nodes = [nt.name for nt in target_nodes()]
+    engine = TickEngine(est_b, nodes, size=size)
+
+    m0a, s0a = est_a.predict_matrix(nodes, size)
+    m0b, s0b = engine.predict_matrix(nodes, size)
+    np.testing.assert_allclose(m0b, m0a, rtol=TOL, atol=TOL)
+    np.testing.assert_allclose(s0b, s0a, rtol=TOL, atol=TOL)
+
+    rng = np.random.default_rng(3)
+    names = list(by_name)
+    for _ in range(6):
+        k = int(rng.integers(1, 4))
+        batch = [(names[int(rng.integers(0, len(names)))],
+                  nodes[int(rng.integers(0, len(nodes)))],
+                  size, float(rng.uniform(5.0, 80.0)))
+                 for _ in range(k)]
+        ys_a = est_a.observe_batch(batch)
+        ys_b = engine.observe_batch(batch)
+        np.testing.assert_allclose(ys_b, ys_a, rtol=TOL, atol=TOL)
+        ma, sa = est_a.predict_matrix(nodes, size)
+        mb, sb = engine.predict_matrix(nodes, size)
+        np.testing.assert_allclose(mb, ma, rtol=TOL, atol=TOL)
+        np.testing.assert_allclose(sb, sa, rtol=TOL, atol=TOL)
+        for name in names[:3]:
+            for nt in nodes[:2]:
+                lo_a, hi_a = est_a.predict_interval_node(name, nt, size, 0.9)
+                lo_b, hi_b = engine.predict_interval_node(name, nt, size, 0.9)
+                assert lo_b == pytest.approx(lo_a, rel=TOL, abs=TOL)
+                assert hi_b == pytest.approx(hi_a, rel=TOL, abs=TOL)
+                pit_a = est_a.predict_pit_node(name, nt, size, 30.0)
+                pit_b = engine.predict_pit_node(name, nt, size, 30.0)
+                assert pit_b == pytest.approx(pit_a, rel=TOL, abs=TOL)
+                assert engine.bias_point(name, nt) == pytest.approx(
+                    est_a.bias_point(name, nt), rel=TOL, abs=TOL)
+
+    # finalize folds the device state back: the OO surface continues
+    engine.finalize()
+    for name in names:
+        for nt in nodes:
+            pa = est_a.predict(name, nt, size)
+            pb = est_b.predict(name, nt, size)
+            np.testing.assert_allclose(pb, pa, rtol=TOL, atol=TOL)
+
+
+def test_tick_step_donates_and_predict_state_matches(cluster):
+    wf, size = "bacass", INPUTS[("bacass", 1)]
+    est, _ = _fitted(cluster, wf, size)
+    nodes = [nt.name for nt in target_nodes()]
+    state, _names = build_state(est, nodes)
+    m0, s0 = predict_state(state, size)
+    m1, s1 = est.predict_matrix(nodes, size)
+    np.testing.assert_allclose(np.asarray(m0), m1, rtol=TOL, atol=TOL)
+    np.testing.assert_allclose(np.asarray(s0), s1, rtol=TOL, atol=TOL)
+    before = np.asarray(state.model.stats.moments).copy()
+    obs = np.zeros((2, 8))
+    obs[0] = [0, 0, size, 25.0, 25.0, 25.0, 1.0, 1.0]
+    obs[1] = [1, 1, size, 40.0, 40.0, 40.0, 1.0, 0.0]   # masked row
+    new_state, mean, std, y = tick_step(
+        state, np.asarray(obs), size, host_deadjust=True)
+    assert np.all(np.isfinite(np.asarray(mean)))
+    # donation: the input state's buffers are consumed
+    with pytest.raises((RuntimeError, ValueError)):
+        jax.block_until_ready(state.model.stats.moments) + 0
+    after = np.asarray(new_state.model.stats.moments)
+    assert not np.array_equal(after[0], before[0])   # live row absorbed
+    assert np.array_equal(after[1], before[1])       # masked row untouched
+
+
+# ---------------------------------------------------------------------------
+# executor-level: full traces agree on all five workflows, faults on/off
+# ---------------------------------------------------------------------------
+def _trace_sig(trace):
+    recs = sorted((r.id, r.node, r.start, r.end, r.pred_mean, r.pred_std)
+                  for r in trace.records)
+    return recs, (trace.makespan, trace.replans, trace.surprises,
+                  trace.completed, trace.failures, trace.retries)
+
+
+def _run_workflow(cluster, wf, *, fused, with_faults, n_samples=2,
+                  nodes_per_type=2, seed=0):
+    local, local_bench, tbenches = cluster
+    size = INPUTS[(wf, 1)]
+    by_name = {t.name: t for t in WORKFLOWS[wf]}
+    tasks, task_name = fanout_chain_dag(list(by_name), n_samples)
+    truth = ClusterSimulator(seed=seed + 2000)
+    truth_tab = {(tid, nt.name): truth.run_task(by_name[task_name[tid]],
+                                                nt, size)
+                 for tid in tasks for nt in target_nodes()}
+    est, _ = _fitted(cluster, wf, size, seed=seed)
+    grid = GridEngine.from_types(nodes_per_type=nodes_per_type)
+    faults = (FaultInjector(p_fail=0.08, seed=seed + 31)
+              if with_faults else None)
+    ex = OnlineExecutor(
+        est, tasks, task_name, size, grid,
+        lambda tid, node: truth_tab[(tid, grid.type_of(node).name)],
+        online=True, confidence=0.9, risk_k=0.5, spec_tail=0.6,
+        faults=faults, rel_k=1.0 if with_faults else None,
+        max_attempts=6, strict=False, fused=fused,
+        incremental_replan=fused if fused else False)
+    return ex.run()
+
+
+@pytest.mark.parametrize("wf", list(WORKFLOWS))
+@pytest.mark.parametrize("with_faults", [False, True])
+def test_fused_executor_matches_legacy(cluster, wf, with_faults):
+    legacy = _run_workflow(cluster, wf, fused=False,
+                           with_faults=with_faults)
+    jax.clear_caches()
+    fused = _run_workflow(cluster, wf, fused=True, with_faults=with_faults)
+    jax.clear_caches()
+    recs_l, tail_l = _trace_sig(legacy)
+    recs_f, tail_f = _trace_sig(fused)
+    assert tail_f[1:] == tail_l[1:]          # counters identical
+    assert tail_f[0] == pytest.approx(tail_l[0], rel=TOL, abs=TOL)
+    assert len(recs_f) == len(recs_l)
+    for a, b in zip(recs_l, recs_f):
+        assert b[:2] == a[:2]                # same task -> node assignment
+        np.testing.assert_allclose(b[2:], a[2:], rtol=TOL, atol=TOL)
+
+
+def test_incremental_replan_alone_is_bitwise(cluster):
+    base = _run_workflow(cluster, "methylseq", fused=False,
+                         with_faults=False)
+    jax.clear_caches()
+    # incremental rank reuse without the fused engine: same estimator
+    # path, so the traces must be BITWISE equal, not just 1e-12-close
+    local, local_bench, tbenches = cluster
+    wf, size = "methylseq", INPUTS[("methylseq", 1)]
+    by_name = {t.name: t for t in WORKFLOWS[wf]}
+    tasks, task_name = fanout_chain_dag(list(by_name), 2)
+    truth = ClusterSimulator(seed=2000)
+    truth_tab = {(tid, nt.name): truth.run_task(by_name[task_name[tid]],
+                                                nt, size)
+                 for tid in tasks for nt in target_nodes()}
+    est, _ = _fitted(cluster, wf, size)
+    grid = GridEngine.from_types(nodes_per_type=2)
+    inc = OnlineExecutor(
+        est, tasks, task_name, size, grid,
+        lambda tid, node: truth_tab[(tid, grid.type_of(node).name)],
+        online=True, confidence=0.9, risk_k=0.5, spec_tail=0.6,
+        max_attempts=6, strict=False, incremental_replan=True).run()
+    assert _trace_sig(inc) == _trace_sig(base)
