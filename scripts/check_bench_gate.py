@@ -24,7 +24,15 @@ useless when bisecting which workflow moved):
   sequence by the committed factor at every (T, N) point with >= 100k
   estimate-matrix cells (PR 9 invariant — the array-native engine
   exists to make tick cost independent of Python dispatch, and a scale
-  section that has gone missing means the arm silently stopped running).
+  section that has gone missing means the arm silently stopped running);
+* data-aware HEFT must earn its transfer term: on the two-rack
+  scatter/gather scenario the comm-aware plan's REALIZED makespan (both
+  plans replayed under the true transfer prices) must beat the
+  comm-blind plan on >= 3/5 workflows and never lose by more than 2%
+  (greedy-EFT myopia tolerance), and the >= 10k-task
+  synthetic-DAG comm-aware schedule must come in under the committed
+  latency bound (PR 10 invariant — a vanished locality section means
+  the arm silently stopped running).
 """
 import json
 import sys
@@ -158,6 +166,45 @@ def main() -> int:
                   f"{p['legacy_tick_s']*1e3:.2f}ms, fused "
                   f"{p['fused_tick_s']*1e3:.2f}ms)")
             ok &= win
+
+    loc = bench.get("locality")
+    if loc is None:
+        print("FAIL locality section missing from BENCH_online.json — "
+              "bench_online predates the data-aware arm or was truncated")
+        ok = False
+    else:
+        def loc_detail(r):
+            return (f"realized blind={r['makespan_blind']:.0f} "
+                    f"aware={r['makespan_aware']:.0f} | cross-rack edges "
+                    f"{r['cross_rack_edges_blind']} -> "
+                    f"{r['cross_rack_edges_aware']}")
+
+        ok &= _check("data-aware vs comm-blind realized makespan",
+                     lambda r: r["makespan_aware"] < r["makespan_blind"],
+                     0.6, "locality_wins", loc["workflows"], loc,
+                     loc_detail)
+        # never lose meaningfully: greedy EFT with a transfer term can
+        # make myopic calls, but a > 2% realized regression means the
+        # pricing is steering placement wrong, not just tying
+        losses = [wf for wf, r in loc["workflows"].items()
+                  if r["makespan_aware"] > r["makespan_blind"] * 1.02]
+        if losses:
+            print(f"FAIL data-aware arm loses > 2% to comm-blind on "
+                  f"{', '.join(losses)} — the transfer term is "
+                  "mispricing placement")
+            ok = False
+        else:
+            print(f"ok   data-aware arm never loses > 2% "
+                  f"({loc['n_workflows']} workflows)")
+        ls = loc["scale"]
+        big = (ls["n_tasks"] >= ls["min_tasks"]
+               and ls["schedule_s"] <= ls["latency_bound_s"])
+        status = "ok  " if big else "FAIL"
+        print(f"{status} locality scale: {ls['n_tasks']} tasks / "
+              f"{ls['n_edges']} edges comm-aware in "
+              f"{ls['schedule_s']:.2f}s (need >= {ls['min_tasks']} "
+              f"tasks within {ls['latency_bound_s']}s)")
+        ok &= big
 
     if not ok:
         print("-- GATE FAILED")

@@ -1,3 +1,5 @@
-from .synthetic import SyntheticLMData
+from .synthetic import (DAG_SCHEMA_VERSION, SyntheticDAG, SyntheticLMData,
+                        synthetic_dag)
 
-__all__ = ["SyntheticLMData"]
+__all__ = ["DAG_SCHEMA_VERSION", "SyntheticDAG", "SyntheticLMData",
+           "synthetic_dag"]

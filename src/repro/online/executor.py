@@ -29,8 +29,9 @@ import numpy as np
 
 from repro.obs.calibration import running_median
 from repro.obs.trace import NULL_TRACER
-from repro.sched.heft import (SchedTask, _topo_order, heft_schedule_array,
-                              upward_rank_array, upward_rank_incremental)
+from repro.sched.heft import (CommCosts, SchedTask, _topo_order,
+                              heft_schedule_array, upward_rank_array,
+                              upward_rank_incremental)
 from repro.sched.simulator import GridEngine
 
 from .buffer import ObservationBuffer
@@ -247,6 +248,20 @@ class OnlineExecutor:
         damage.  The static-plan-under-faults baseline runs non-strict:
         stranding work is exactly the failure mode the fault-tolerant
         loop exists to prevent.
+    edge_gb : ``(producer_id, consumer_id) -> GB`` per-edge data volumes
+        over the instance DAG (e.g. ``repro.sched.workflows.dag_edge_gb``)
+        or ``None`` (default — the data-free loop, bit-exact with
+        pre-comm behaviour).  With volumes attached AND a grid topology,
+        execution becomes data-aware end to end: every launch is delayed
+        by the realized staging time of inputs still in flight from
+        other nodes (compute ``runtime`` stays pure — the estimator's
+        runtime posterior never sees transfer time), and every (re-)plan
+        prices transfers via ``CommCosts`` built from the grid's LIVE
+        ``secs_per_gb`` matrix — so dead nodes are masked as data
+        sources and rejoining nodes re-enter comm pricing, tick by tick.
+    comm_aware : ``False`` keeps the realized staging delays (the
+        cluster still pays for copies) but plans comm-blind — the
+        ablation arm the data-locality bench compares against.
     tracer : a ``repro.obs`` tracer (e.g. ``EventLog``) or ``None``
         (default, the zero-cost no-op path).  With a live tracer the
         whole tick becomes observable: typed events (tick, plan,
@@ -271,7 +286,9 @@ class OnlineExecutor:
                  backoff_base: float = 1.0, backoff_cap: float = 30.0,
                  rel_k: float | None = None, strict: bool = True,
                  tracer=None, fused: bool = False,
-                 incremental_replan: bool | None = None):
+                 incremental_replan: bool | None = None,
+                 edge_gb: dict[tuple[str, str], float] | None = None,
+                 comm_aware: bool = True):
         if spec_tail is not None and not 0.0 < spec_tail < 1.0:
             raise ValueError(f"spec_tail must be in (0, 1), got {spec_tail}")
         if max_attempts < 1:
@@ -352,6 +369,28 @@ class OnlineExecutor:
         self._rows_full = np.array([self._row[tid] for tid in self._ids])
         self._topo_full: list[int] | None = None
         self._rank_cache: tuple[np.ndarray, np.ndarray] | None = None
+        # data-aware execution: staging delays always apply once edge
+        # volumes + a topology exist; comm_aware additionally routes the
+        # transfer term into planning.  _node_of tracks where each
+        # started/finished task's output lives (the winning attempt's
+        # node), _node_idx maps node name -> column for the 2-D floors.
+        self.edge_gb = dict(edge_gb) if edge_gb is not None else None
+        self._has_comm = (self.edge_gb is not None
+                          and grid.topology is not None)
+        self.comm_aware = comm_aware and self._has_comm
+        self._node_of: dict[str, str] = {}
+        self._node_idx = {n: j for j, n in enumerate(self.node_names)}
+        self._edge_gb_full: dict[tuple[int, int], float] = {}
+        if self.edge_gb is not None:
+            for (p, s), g in self.edge_gb.items():
+                if p in self._id_idx and s in self._id_idx:
+                    self._edge_gb_full[(self._id_idx[p],
+                                        self._id_idx[s])] = float(g)
+        # the incremental rank cache is additionally keyed on the live
+        # transfer matrix: membership churn re-prices the mean transfer
+        # rate, which is part of the comm-aware rank, so a changed matrix
+        # invalidates prev_rank wholesale (see upward_rank_incremental)
+        self._rank_spg_key: bytes | None = None
 
     def _backoff(self, n_failures: int) -> float:
         """Retry delay after the ``n_failures``-th failure of a task:
@@ -377,16 +416,19 @@ class OnlineExecutor:
                                         with_std=with_std)
 
     def _incremental_rank(self, unstarted: list[str], mean, std,
-                          rf) -> np.ndarray:
+                          rf, spg: np.ndarray | None = None) -> np.ndarray:
         """Upward ranks for the unstarted subgraph, refreshed from the
         cached full-instance-graph ranks instead of recomputed.
 
         Bitwise equal to the rank ``heft_schedule_array`` would build
         itself: a task can only start once every predecessor is done, so
         successors of unstarted tasks are themselves unstarted — the
-        full-graph rank restricted to the frontier IS the subgraph rank.
-        Only instances whose effective mean cost changed since the last
-        plan (plus their ancestor chains) are re-ranked."""
+        full-graph rank restricted to the frontier IS the subgraph rank
+        (edges into the frontier never enter an *upward* rank, so this
+        holds with the comm term too).  Only instances whose effective
+        mean cost changed since the last plan (plus their ancestor
+        chains) are re-ranked; a changed transfer matrix (membership
+        churn re-pricing the mean rate) drops the cache wholesale."""
         eff_abs = mean[:, self._col]
         if rf is not None:
             eff_abs = eff_abs * rf[None, :]
@@ -396,18 +438,29 @@ class OnlineExecutor:
                 unc_abs = unc_abs * rf[None, :]
             eff_abs = eff_abs + self.risk_k * unc_abs
         inst_cost = eff_abs.mean(axis=1)[self._rows_full]
+        edge_comm = None
+        if spg is not None:
+            key = spg.tobytes()
+            if key != self._rank_spg_key:
+                self._rank_cache = None
+                self._rank_spg_key = key
+            mean_spg = float(spg.mean())
+            edge_comm = [[self._edge_gb_full.get((t, s), 0.0) * mean_spg
+                          for s in ss]
+                         for t, ss in enumerate(self._succ_full)]
         if self._rank_cache is None:
             if self._topo_full is None:
                 self._topo_full = _topo_order(self._succ_full,
                                               self._pred_full)
             rank_full = upward_rank_array(self._succ_full,
-                                          self._pred_full, inst_cost)
+                                          self._pred_full, inst_cost,
+                                          edge_comm=edge_comm)
         else:
             prev_cost, prev_rank = self._rank_cache
             dirty = np.nonzero(inst_cost != prev_cost)[0]
             rank_full = upward_rank_incremental(
                 self._succ_full, self._pred_full, inst_cost, prev_rank,
-                dirty, topo=self._topo_full)
+                dirty, topo=self._topo_full, edge_comm=edge_comm)
         self._rank_cache = (inst_cost, rank_full)
         return rank_full[[self._id_idx[tid] for tid in unstarted]]
 
@@ -446,14 +499,45 @@ class OnlineExecutor:
             cost = cost * rf[None, :]
             if unc is not None:
                 unc = unc * rf[None, :]
-        rank = (self._incremental_rank(unstarted, mean, std, rf)
+        comm = None
+        spg = None
+        if self.comm_aware:
+            # live transfer matrix: dead nodes are re-priced as data
+            # sources every plan (stateless), rejoins restore real rates
+            spg = self.grid.secs_per_gb()
+        if spg is not None:
+            comm = CommCosts(
+                pred,
+                {(idx[p], idx[s]): g for (p, s), g in self.edge_gb.items()
+                 if p in idx and s in idx},
+                spg)
+        rank = (self._incremental_rank(unstarted, mean, std, rf, spg)
                 if self._incremental and frontier_exact else None)
-        task_ready = np.array([
-            max((ext_finish.get(p, t_now)
-                 for p in self.tasks[tid].pred if p not in idx),
-                default=t_now)
-            for tid in unstarted])
-        task_ready = np.maximum(task_ready, t_now)
+        if comm is None:
+            task_ready = np.array([
+                max((ext_finish.get(p, t_now)
+                     for p in self.tasks[tid].pred if p not in idx),
+                    default=t_now)
+                for tid in unstarted])
+            task_ready = np.maximum(task_ready, t_now)
+        else:
+            # (T, N) floors: an external (done/running) predecessor's
+            # output still has to be COPIED from where it ran to wherever
+            # the frontier task lands, so its floor is node-dependent
+            task_ready = np.full((len(unstarted), len(self.node_names)),
+                                 t_now)
+            for i, tid in enumerate(unstarted):
+                for p in self.tasks[tid].pred:
+                    if p in idx:
+                        continue
+                    base = max(ext_finish.get(p, t_now), t_now)
+                    gb = self.edge_gb.get((p, tid), 0.0)
+                    src = self._node_idx.get(self._node_of.get(p))
+                    if src is None or gb <= 0:
+                        task_ready[i] = np.maximum(task_ready[i], base)
+                    else:
+                        task_ready[i] = np.maximum(
+                            task_ready[i], base + gb * spg[src])
         if self.tracer.enabled:
             self.tracer.emit("plan", t_sim=t_now, n_tasks=len(unstarted),
                              risk=self.risk_k > 0)
@@ -461,7 +545,7 @@ class OnlineExecutor:
             sched = heft_schedule_array(
                 succ, pred, cost, unc, self.risk_k,
                 node_ready=self.grid.ready_vector(t_now),
-                task_ready=task_ready, rank=rank)
+                task_ready=task_ready, rank=rank, comm=comm)
         queues: dict[str, list[str]] = {n: [] for n in self.node_names}
         for i in sched["order"]:
             queues[self.node_names[sched["assignment"][i]]].append(
@@ -510,26 +594,45 @@ class OnlineExecutor:
         spec_run: dict[str, TaskRun] = {}       # pending copy's TaskRun
         speculated: set[str] = set()
 
-        def launch(tid: str, node: str, t_now: float) -> float:
+        def launch(tid: str, node: str, t_now: float) -> tuple[float, float]:
             """Draw the attempt's fate and book it: a successful attempt
-            finishes at start + dur; a doomed one (``faults`` decided)
-            dies at its deterministic failure fraction of the runtime.
-            Returns the attempt's true duration."""
+            finishes at start + staging + dur; a doomed one (``faults``
+            decided) dies at its deterministic failure fraction of the
+            runtime.  Returns ``(duration, staging wait)`` — with edge
+            volumes + a topology, inputs produced on OTHER nodes must
+            first be copied over (same-node inputs are free), and the
+            attempt computes only after the last one lands.  The wait is
+            charged to the cluster whether or not planning was comm-aware
+            (that is the bench's whole comparison) but never to the
+            compute ``runtime`` the estimator observes."""
             nonlocal seq
             dur = float(self.runtime_fn(tid, node))
+            wait = 0.0
+            if self._has_comm:
+                topo = self.grid.topology
+                for p in self.tasks[tid].pred:
+                    gb = self.edge_gb.get((p, tid), 0.0)
+                    src = self._node_of.get(p)
+                    if gb <= 0 or src is None or src == node:
+                        continue
+                    arr = done.get(p, t_now) + gb * topo.pair_secs_per_gb(
+                        src, node)
+                    if arr - t_now > wait:
+                        wait = arr - t_now
             k = attempt_no.get(tid, 0)
             attempt_no[tid] = k + 1
             frac = (self.faults.attempt_outcome(tid, node, k)
                     if self.faults is not None else None)
             if frac is None:
-                end, kind = t_now + dur, "finish"
+                end, kind = t_now + wait + dur, "finish"
             else:
-                end, kind = t_now + frac * dur, "fail"
+                end, kind = t_now + wait + frac * dur, "fail"
             self.grid.occupy(node, end)
             heapq.heappush(heap, (end, seq, kind, tid, node))
             running.setdefault(tid, []).append((node, end, seq, t_now))
             seq += 1
-            return dur
+            self._node_of[tid] = node
+            return dur, wait
 
         def dispatch(t_now: float) -> bool:
             progressed = False
@@ -546,14 +649,14 @@ class OnlineExecutor:
                 if tr.enabled:
                     tr.emit("dispatch", t_sim=t_now, task=pick, node=node,
                             attempt=attempt_no.get(pick, 0))
-                dur = launch(pick, node, t_now)
+                dur, wait = launch(pick, node, t_now)
                 r, c = self._row[pick], self._type_idx[
                     self.grid.type_of(node).name]
-                expected_finish[pick] = t_now + float(mean[r, c])
+                expected_finish[pick] = t_now + wait + float(mean[r, c])
                 run_rec = TaskRun(
                     id=pick, name=self.task_name[pick], node=node,
                     node_type=self.grid.type_of(node).name,
-                    start=t_now, end=t_now + dur, runtime=dur,
+                    start=t_now, end=t_now + wait + dur, runtime=dur,
                     pred_mean=float(mean[r, c]), pred_std=float(std[r, c]))
                 if pick in rec_idx:      # retry: replace the lost attempt
                     trace.records[rec_idx[pick]] = run_rec
@@ -740,8 +843,8 @@ class OnlineExecutor:
                     r, self._type_idx[self.grid.type_of(n).name]]
                     + self.risk_k * std[
                         r, self._type_idx[self.grid.type_of(n).name]])
-                dur = launch(tid, alt, t_now)
-                end = t_now + dur
+                dur, wait = launch(tid, alt, t_now)
+                end = t_now + wait + dur
                 speculated.add(tid)
                 c = self._type_idx[self.grid.type_of(alt).name]
                 spec_run[tid] = TaskRun(
@@ -824,6 +927,7 @@ class OnlineExecutor:
                 seen.add(tid2)
             for ctid, cnode, cend in completions:
                 done[ctid] = cend
+                self._node_of[ctid] = cnode  # winner holds the output
                 # resolve the speculative race: kill the other attempts,
                 # free their nodes NOW, and let the winning run's record
                 # stand (predictions are the dispatch-time belief of the

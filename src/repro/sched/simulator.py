@@ -43,11 +43,29 @@ class ClusterSimulator:
     """
 
     def __init__(self, seed: int = 0, noise: float = 0.05,
-                 systematic: float = 0.10, het: float = 0.0):
+                 systematic: float = 0.10, het: float = 0.0,
+                 topology: "Topology | None" = None):
         self.rng = np.random.default_rng(seed)
         self.noise = noise
         self.systematic = systematic
         self.het = het
+        self.topology = topology
+
+    # ---- data plane --------------------------------------------------------
+    def transfer_time(self, gb: float, src: str, dst: str,
+                      noisy: bool = True) -> float:
+        """Ground-truth seconds to ship ``gb`` from node ``src`` to
+        ``dst`` under the configured ``Topology`` (0 without one, or on
+        the same node — the data is already there).  ``noisy`` applies
+        the same lognormal run-to-run jitter as task runtimes; the
+        noise-free value is what a perfectly-informed planner would
+        price, so bench arms compare against ``noisy=False`` truth."""
+        if self.topology is None or src == dst or gb <= 0:
+            return 0.0
+        t = float(gb) * self.topology.pair_secs_per_gb(src, dst)
+        if noisy and t > 0:
+            t *= self.rng.lognormal(0.0, self.noise)
+        return float(t)
 
     @staticmethod
     def _pair_rng(task_name: str, node_name: str,
@@ -120,6 +138,127 @@ class ClusterSimulator:
         if noisy:
             t *= self.rng.lognormal(0.0, self.noise)
         return float(t)
+
+
+# ---------------------------------------------------------------------------
+# Zone/rack topology (bandwidth matrix for data-aware scheduling)
+# ---------------------------------------------------------------------------
+class Topology:
+    """Zone (rack) placement + pairwise bandwidth — the cluster-side half
+    of data-aware HEFT (``repro.sched.heft.CommCosts`` is the DAG-side
+    half).
+
+    ``zones`` maps node name -> zone label; ``bandwidth_gbps`` prices a
+    zone *pair* in GB/s (unordered — ``(a, b)`` and ``(b, a)`` are the
+    same link; the zone-keyed dict shape follows the grid-engine
+    ``COMM_COSTS`` convention).  Unlisted pairs fall back to
+    ``intra_gbps`` within a zone and ``cross_gbps`` across zones, so the
+    common two-tier rack model needs no explicit table at all.  The
+    scheduler consumes the *reciprocal*: seconds per GB, zero on the
+    diagonal (same node — no copy), small within a zone, large across
+    racks.
+    """
+
+    def __init__(self, zones: dict[str, str],
+                 bandwidth_gbps: dict[tuple[str, str], float] | None = None,
+                 intra_gbps: float = 10.0, cross_gbps: float = 1.0):
+        if intra_gbps <= 0 or cross_gbps <= 0:
+            raise ValueError("bandwidths must be positive (zero bandwidth "
+                             "would make every transfer infinite)")
+        self.zones = {str(n): str(z) for n, z in zones.items()}
+        self.bandwidth_gbps: dict[frozenset, float] = {}
+        for (z1, z2), g in (bandwidth_gbps or {}).items():
+            if g <= 0:
+                raise ValueError(f"bandwidth for zone pair ({z1}, {z2}) "
+                                 f"must be positive, got {g}")
+            self.bandwidth_gbps[frozenset((str(z1), str(z2)))] = float(g)
+        self.intra_gbps = float(intra_gbps)
+        self.cross_gbps = float(cross_gbps)
+
+    @classmethod
+    def split(cls, names: list[str], n_zones: int = 2,
+              **kw) -> "Topology":
+        """Deal ``names`` round-robin into ``rack0..rack{n-1}`` — the
+        stock cross-rack scenario used by the bench and tests.
+        Round-robin (not contiguous blocks) so every node *type* spans
+        racks: with ``from_types``-style ``type/0, type/1, ...`` naming,
+        a type's instances land in different zones and placement has a
+        real locality choice to make."""
+        if n_zones < 1:
+            raise ValueError(f"n_zones must be >= 1, got {n_zones}")
+        return cls({n: f"rack{i % n_zones}" for i, n in enumerate(names)},
+                   **kw)
+
+    @classmethod
+    def blocks(cls, names: list[str], n_zones: int = 2,
+               **kw) -> "Topology":
+        """Deal ``names`` in contiguous blocks into ``rack0..rack{n-1}``.
+        With ``from_types`` ordering this concentrates each node type in
+        one rack — racks become heterogeneous in speed, so chasing the
+        fastest hardware means leaving the rack your data is on.  The
+        adversarial counterpart to ``split`` for locality benches."""
+        if n_zones < 1:
+            raise ValueError(f"n_zones must be >= 1, got {n_zones}")
+        per = max(1, -(-len(names) // n_zones))
+        return cls({n: f"rack{min(i // per, n_zones - 1)}"
+                    for i, n in enumerate(names)}, **kw)
+
+    def zone(self, name: str) -> str:
+        return self.zones[name]
+
+    def gbps(self, z1: str, z2: str) -> float:
+        """Bandwidth between two zones (symmetric)."""
+        key = frozenset((z1, z2))
+        if key in self.bandwidth_gbps:
+            return self.bandwidth_gbps[key]
+        return self.intra_gbps if z1 == z2 else self.cross_gbps
+
+    def pair_secs_per_gb(self, src: str, dst: str) -> float:
+        """Transfer price for one node pair: 0 on the same node."""
+        if src == dst:
+            return 0.0
+        return 1.0 / self.gbps(self.zones[src], self.zones[dst])
+
+    def secs_per_gb(self, names: list[str],
+                    alive: dict[str, bool] | None = None) -> np.ndarray:
+        """(N, N) seconds-per-GB matrix over ``names`` — what
+        ``CommCosts`` consumes.  Zero diagonal; same-zone pairs get the
+        intra rate (the zone discount), cross-zone the link rate.
+
+        ``alive`` masks dead nodes *as data sources*: a crashed node's
+        outgoing rows are re-priced at the worst finite off-diagonal
+        rate in the matrix, so the planner can never treat a dead
+        replica as a cheap place to read an input from (placement ON
+        dead nodes is already impossible via the executor's ``+inf``
+        ``ready_vector``; this closes the source side).  The masking is
+        stateless — recomputing after a rejoin restores the node's real
+        prices automatically."""
+        unknown = [n for n in names if n not in self.zones]
+        if unknown:
+            raise KeyError(f"nodes missing from topology zones: {unknown}")
+        N = len(names)
+        spg = np.zeros((N, N))
+        for i, a in enumerate(names):
+            for j, b in enumerate(names):
+                if i != j:
+                    spg[i, j] = 1.0 / self.gbps(self.zones[a], self.zones[b])
+        if alive is not None:
+            dead = [i for i, n in enumerate(names) if not alive.get(n, True)]
+            if dead and N > 1:
+                off = spg[~np.eye(N, dtype=bool)]
+                worst = float(off.max())
+                for i in dead:
+                    spg[i, :] = worst
+                    spg[i, i] = 0.0   # CommCosts' free-diagonal invariant
+        return spg
+
+    def secs_per_gb_dict(self, names: list[str]
+                         ) -> dict[str, dict[str, float]]:
+        """Dict-of-dicts view of ``secs_per_gb`` for the string-keyed
+        ``heft_schedule`` API and debugging."""
+        spg = self.secs_per_gb(names)
+        return {a: {b: float(spg[i, j]) for j, b in enumerate(names)}
+                for i, a in enumerate(names)}
 
 
 # ---------------------------------------------------------------------------
@@ -231,8 +370,10 @@ class GridEngine:
     The executor owns queues and decisions; ``EventSimulator`` remains the
     batch-mode engine for pre-computed schedules."""
 
-    def __init__(self, nodes: list[SimNode]):
+    def __init__(self, nodes: list[SimNode],
+                 topology: Topology | None = None):
         self.nodes = {n.name: n for n in nodes}
+        self.topology = topology
         # observability: membership churn (fail/join) is emitted through
         # this tracer; NULL_TRACER is the zero-cost disabled default and
         # OnlineExecutor(tracer=...) swaps in its live EventLog
@@ -241,12 +382,26 @@ class GridEngine:
 
     @classmethod
     def from_types(cls, nodes_per_type: int = 2,
-                   types: list[NodeType] | None = None) -> "GridEngine":
+                   types: list[NodeType] | None = None,
+                   topology: Topology | None = None) -> "GridEngine":
         """Expand node types into `nodes_per_type` instances each
         (named ``<type>/<i>``, like the scheduler benchmarks)."""
         types = list(types) if types is not None else target_nodes()
         return cls([SimNode(name=f"{nt.name}/{i}", node_type=nt)
-                    for nt in types for i in range(nodes_per_type)])
+                    for nt in types for i in range(nodes_per_type)],
+                   topology=topology)
+
+    def secs_per_gb(self) -> np.ndarray | None:
+        """Current (N, N) transfer-price matrix in ``names()`` order, with
+        dead nodes masked as data sources (see ``Topology.secs_per_gb``) —
+        ``None`` when no topology is configured (comm-blind engine).
+        Recomputed from live membership on every call, so a rejoining
+        node re-enters real comm pricing immediately."""
+        if self.topology is None:
+            return None
+        return self.topology.secs_per_gb(
+            self.names(), alive={n: sn.alive
+                                 for n, sn in self.nodes.items()})
 
     def names(self) -> list[str]:
         return list(self.nodes)

@@ -31,6 +31,7 @@ class TaskDef:
     io_unit: float           # s per GB
     kind: str = "linear"     # linear | flat | sqrt
     base: float = 5.0        # constant seconds (dominates for kind="flat")
+    out_unit: float = 0.25   # GB shipped downstream per effective input GB
 
     @property
     def cpu_share(self) -> float:
@@ -131,3 +132,38 @@ def effective_size(task: TaskDef, size_gb: float) -> float:
     if task.kind == "sqrt":
         return size_gb ** 0.5
     return size_gb
+
+
+#: every edge ships at least this much (manifests, logs, QC reports) —
+#: keeps flat tasks (effective size 0) from pretending their downstream
+#: reads nothing at all
+EDGE_BASE_GB = 0.02
+
+
+def edge_gb(task: TaskDef, size_gb: float) -> float:
+    """GB the task ships along EACH outgoing DAG edge for an input of
+    ``size_gb``: its output volume ``out_unit * effective_size`` plus the
+    ``EDGE_BASE_GB`` floor.  Output scales with the same kind-transformed
+    size as runtime does — flat report tasks (multiqc, quast) ship only
+    the floor, aligners ship the big BAMs — so data-aware placement
+    faces the realistic mix of heavy and negligible edges."""
+    return EDGE_BASE_GB + task.out_unit * effective_size(task, size_gb)
+
+
+def dag_edge_gb(tasks, task_name: dict[str, str],
+                by_name: dict[str, TaskDef],
+                size_gb: float) -> dict[tuple[str, str], float]:
+    """Per-edge data sizes for an instance DAG over this workflow.
+
+    ``tasks`` is a ``{task_id: SchedTask}`` DAG (e.g. from
+    ``fanout_chain_dag``), ``task_name`` maps instance id -> abstract
+    task name, ``by_name`` maps name -> ``TaskDef``.  Returns the
+    ``(producer_id, consumer_id) -> GB`` dict that ``heft_schedule`` /
+    ``CommCosts`` consume; every edge out of a producer carries that
+    producer's ``edge_gb`` volume."""
+    out: dict[tuple[str, str], float] = {}
+    for tid, t in tasks.items():
+        gb = edge_gb(by_name[task_name[tid]], size_gb)
+        for s in t.succ:
+            out[(tid, s)] = gb
+    return out

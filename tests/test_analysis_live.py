@@ -100,6 +100,7 @@ BLR = SRC / "repro" / "core" / "blr.py"
 EXECUTOR = SRC / "repro" / "online" / "executor.py"
 TRACE = SRC / "repro" / "obs" / "trace.py"
 BUFFER = SRC / "repro" / "online" / "buffer.py"
+SYNTHETIC = SRC / "repro" / "data" / "synthetic.py"
 
 #: the keys each schema version introduced — the write side of the
 #: on-disk format, pinned so a writer edit that drops a version's keys
@@ -122,6 +123,7 @@ ESTIMATOR_SCHEMA_KEYS = {
     ("ExecutionTrace", EXECUTOR, "to_dict", "from_dict"),
     ("Event", TRACE, "to_json", "from_json"),
     ("ObservationBuffer", BUFFER, "to_dict", "from_dict"),
+    ("SyntheticDAG", SYNTHETIC, "to_dict", "from_dict"),
 ])
 def test_ra004_live_writer_keys_all_consumed(cls, path, writer, reader):
     fns = _class_fns(path, cls)

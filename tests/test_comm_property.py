@@ -1,0 +1,127 @@
+"""Property suite (hypothesis) for data-aware HEFT: over arbitrary seeded
+synthetic DAGs and random clusters, the array engine must agree with the
+independent dict reference bit-for-bit (comm on AND off), and every
+schedule must satisfy the structural scheduling invariants — precedence
+with transfer floors, per-node no-overlap, and free same-node edges."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; skip, don't die
+from hypothesis import given, settings, strategies as st
+
+from repro.data.synthetic import synthetic_dag
+from repro.sched import CommCosts, Topology, heft_schedule_array
+from repro.sched.heft import SchedTask, heft_schedule_reference
+
+
+def _cluster(seed: int, n_nodes: int, n_zones: int):
+    rng = np.random.default_rng(seed)
+    names = [f"n{j}" for j in range(n_nodes)]
+    speeds = rng.uniform(0.25, 4.0, n_nodes)
+    topo = Topology.blocks(names, n_zones,
+                           intra_gbps=float(rng.uniform(2.0, 20.0)),
+                           cross_gbps=float(rng.uniform(0.05, 0.5)))
+    return names, speeds, topo
+
+
+def _as_dicts(dag, cost, names):
+    ids = [f"t{i}" for i in range(dag.n_tasks)]
+    tasks = {ids[i]: SchedTask(id=ids[i],
+                               pred=[ids[p] for p in dag.pred[i]],
+                               succ=[ids[s] for s in dag.succ[i]])
+             for i in range(dag.n_tasks)}
+    dcost = {ids[i]: {names[j]: float(cost[i, j])
+                      for j in range(len(names))}
+             for i in range(dag.n_tasks)}
+    deg = {(ids[p], ids[t]): g for (p, t), g in dag.edge_dict().items()}
+    return ids, tasks, dcost, deg
+
+
+DAGS = st.tuples(st.integers(0, 2**31 - 1),   # seed
+                 st.integers(2, 6),           # width
+                 st.integers(2, 8),           # depth
+                 st.floats(1.0, 3.0),         # fanout
+                 st.integers(2, 8),           # n_nodes
+                 st.integers(2, 3))           # n_zones
+
+
+@settings(max_examples=20, deadline=None)
+@given(DAGS, st.booleans())
+def test_array_matches_reference(params, comm_on):
+    seed, width, depth, fanout, n_nodes, n_zones = params
+    dag = synthetic_dag(width=width, depth=depth, fanout=fanout,
+                        data_gb_mean=2.0, seed=seed)
+    names, speeds, topo = _cluster(seed ^ 0x5EED, n_nodes, n_zones)
+    cost = dag.cost_matrix(speeds)
+    spg = topo.secs_per_gb(names)
+    comm = (CommCosts(dag.pred, dag.edge_dict(), spg)
+            if comm_on else None)
+    arr = heft_schedule_array(dag.succ, dag.pred, cost, comm=comm)
+    ids, tasks, dcost, deg = _as_dicts(dag, cost, names)
+    ref = heft_schedule_reference(
+        tasks, dcost, names,
+        edge_gb=deg if comm_on else None,
+        secs_per_gb=spg if comm_on else None)
+    nidx = {n: j for j, n in enumerate(names)}
+    assert [nidx[ref["assignment"][t]] for t in ids] == \
+        list(arr["assignment"])
+    assert [int(t[1:]) for t in ref["order"]] == list(arr["order"])
+    for i, tid in enumerate(ids):
+        assert ref["start"][tid] == arr["start"][i], tid
+        assert ref["finish"][tid] == arr["finish"][i], tid
+    assert ref["makespan"] == arr["makespan"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(DAGS)
+def test_schedule_invariants_hold_under_comm(params):
+    seed, width, depth, fanout, n_nodes, n_zones = params
+    dag = synthetic_dag(width=width, depth=depth, fanout=fanout,
+                        data_gb_mean=2.0, seed=seed)
+    names, speeds, topo = _cluster(seed ^ 0xD1A6, n_nodes, n_zones)
+    cost = dag.cost_matrix(speeds)
+    spg = topo.secs_per_gb(names)
+    eg = dag.edge_dict()
+    comm = CommCosts(dag.pred, eg, spg)
+    s = heft_schedule_array(dag.succ, dag.pred, cost, comm=comm)
+    asg, start, fin = s["assignment"], s["start"], s["finish"]
+    T = dag.n_tasks
+    # duration consistency: finish - start is exactly the chosen cost
+    for t in range(T):
+        assert fin[t] - start[t] == pytest.approx(cost[t, asg[t]],
+                                                  rel=0, abs=1e-9)
+    # precedence + transfer floor: a task may not start before every
+    # predecessor's output has ARRIVED at its node (same node: free)
+    for t in range(T):
+        for p in dag.pred[t]:
+            gb = eg[(p, t)]
+            delay = gb * spg[asg[p], asg[t]]
+            assert start[t] >= fin[p] + delay - 1e-9, (p, t)
+            if asg[p] == asg[t]:
+                assert spg[asg[p], asg[t]] == 0.0
+    # no-overlap: tasks sharing a node never run concurrently
+    by_node: dict[int, list[tuple[float, float]]] = {}
+    for t in range(T):
+        by_node.setdefault(int(asg[t]), []).append((start[t], fin[t]))
+    for spans in by_node.values():
+        spans.sort()
+        for (s0, f0), (s1, _f1) in zip(spans, spans[1:]):
+            assert s1 >= f0 - 1e-9
+    # makespan is the latest finish
+    assert s["makespan"] == fin.max()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 5), st.integers(2, 6))
+def test_comm_none_is_independent_of_topology(seed, width, depth):
+    """comm=None must be byte-identical to simply not knowing about the
+    topology at all — the knob-off path is the pre-PR scheduler."""
+    dag = synthetic_dag(width=width, depth=depth, seed=seed)
+    rng = np.random.default_rng(seed + 9)
+    cost = dag.cost_matrix(rng.uniform(0.5, 2.0, 4))
+    a = heft_schedule_array(dag.succ, dag.pred, cost)
+    b = heft_schedule_array(dag.succ, dag.pred, cost, comm=None)
+    assert (a["assignment"] == b["assignment"]).all()
+    assert (a["start"] == b["start"]).all()
+    assert (a["finish"] == b["finish"]).all()
+    assert a["makespan"] == b["makespan"]

@@ -513,3 +513,71 @@ def test_v4_file_without_reliability_loads(tmp_path):
     assert loaded.reliability_factor("anything") == 1.0
     np.testing.assert_allclose(
         loaded.reliability_factors(["a", "b"]), np.ones(2))
+
+
+# ---------------------------------------------------------------------------
+# Elastic membership x data-aware placement: a dead node must never be a
+# cheap data source, and a rejoining node re-enters real comm pricing
+# ---------------------------------------------------------------------------
+def _two_rack_grid():
+    from repro.sched.simulator import Topology
+    nodes = [SimNode(name=n, node_type=get_node("tpu-v2"))
+             for n in ("a0", "a1", "b0", "b1")]
+    topo = Topology({"a0": "r0", "a1": "r0", "b0": "r1", "b1": "r1"},
+                    intra_gbps=10.0, cross_gbps=0.1)
+    return GridEngine(nodes, topology=topo), topo
+
+
+def test_dead_node_masks_transfer_term():
+    grid, topo = _two_rack_grid()
+    names = grid.names()
+    live = grid.secs_per_gb()
+    worst = live[np.isfinite(live)].max()
+    # same-rack pair is cheap while both ends are alive
+    assert live[0, 1] == pytest.approx(1.0 / 10.0)
+    grid.fail("a0", at=5.0)
+    masked = grid.secs_per_gb()
+    # data stranded on the dead a0 now costs the WORST finite rate to
+    # every other node — the planner can no longer treat it as local ...
+    assert (masked[0, 1:] == worst).all()
+    # ... while the diagonal stays zero (CommCosts rejects anything else)
+    assert masked[0, 0] == 0.0
+    # pricing between live nodes is untouched
+    assert (masked[1:, 1:] == live[1:, 1:]).all()
+
+
+def test_rejoined_node_reenters_comm_pricing():
+    grid, topo = _two_rack_grid()
+    before = grid.secs_per_gb().copy()
+    grid.fail("b0", at=1.0)
+    assert not (grid.secs_per_gb() == before).all()
+    grid.join("b0", at=2.0)
+    # secs_per_gb is recomputed from live membership on every call, so
+    # the revived node's original zone pricing is restored exactly
+    np.testing.assert_array_equal(grid.secs_per_gb(), before)
+
+
+def test_replan_avoids_dead_data_source():
+    """End-to-end: with the producer's node dead, a comm-aware re-plan
+    must price its output at the worst rate rather than clustering
+    successors 'near' the corpse."""
+    from repro.sched.heft import CommCosts
+    grid, topo = _two_rack_grid()
+    names = grid.names()
+    succ, pred = [[1], []], [[], [0]]
+    eg = {(0, 1): 50.0}  # 50 GB: placement is all about this edge
+    cost = np.array([[10.0, 10.0, 10.0, 10.0]] * 2)
+    comm = CommCosts(pred, eg, grid.secs_per_gb())
+    s = heft_schedule_array(succ, pred, cost, comm=comm)
+    # alive: consumer co-locates with the producer (transfer is free)
+    assert s["assignment"][1] == s["assignment"][0]
+    src = names[s["assignment"][0]]
+    grid.fail(src, at=0.0)
+    masked = CommCosts(pred, eg, grid.secs_per_gb())
+    floors = masked.ready_floor(1, np.array([10.0, 0.0]),
+                                np.array(s["assignment"]))
+    live_js = [j for j, n in enumerate(names) if n != src]
+    # the stranded output costs the same (worst) rate toward every live
+    # node: proximity to the dead source buys nothing anymore
+    assert len({round(float(floors[j]), 9) for j in live_js}) == 1
+    assert float(floors[live_js[0]]) > 10.0

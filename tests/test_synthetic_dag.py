@@ -1,0 +1,128 @@
+"""WfCommons-style synthetic DAG generator: determinism, serialisation
+round-trip, parameter validation (errors must NAME the offending knob),
+and structural guarantees (layered acyclic shape, bounded in-degree)."""
+import numpy as np
+import pytest
+
+from repro.data import DAG_SCHEMA_VERSION, SyntheticDAG, synthetic_dag
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+def test_same_seed_is_bit_identical():
+    a = synthetic_dag(width=7, depth=9, fanout=2.5, seed=123)
+    b = synthetic_dag(width=7, depth=9, fanout=2.5, seed=123)
+    assert a.succ == b.succ
+    assert a.pred == b.pred
+    assert a.data_gb == b.data_gb          # exact float equality
+    assert (a.work == b.work).all()
+    assert a.params == b.params
+
+
+def test_different_seeds_differ():
+    a = synthetic_dag(width=7, depth=9, seed=0)
+    b = synthetic_dag(width=7, depth=9, seed=1)
+    assert a.succ != b.succ or not (a.work == b.work).all()
+
+
+def test_generator_is_layered_and_sized():
+    dag = synthetic_dag(width=6, depth=12, fanout=2.0, seed=4)
+    # every layer jitters within [ceil(width/2), width]
+    assert 12 * 3 <= dag.n_tasks <= 12 * 6
+    # roots only in the first layer: every later task has >= 1 pred
+    n_roots = sum(1 for p in dag.pred if not p)
+    assert n_roots <= 6
+    # bounded in-degree keeps E linear in T
+    assert dag.n_edges <= dag.n_tasks * 6
+
+
+# ---------------------------------------------------------------------------
+# serialisation round-trip
+# ---------------------------------------------------------------------------
+def test_to_dict_from_dict_round_trip():
+    dag = synthetic_dag(width=5, depth=7, fanout=2.2, seed=77)
+    d = dag.to_dict()
+    assert d["version"] == DAG_SCHEMA_VERSION
+    back = SyntheticDAG.from_dict(d)
+    assert back.succ == dag.succ
+    assert back.pred == dag.pred
+    assert back.data_gb == dag.data_gb
+    assert (back.work == dag.work).all()
+    assert back.params == dag.params
+    # and the round trip is a fixed point
+    assert back.to_dict() == d
+
+
+def test_from_dict_rejects_unknown_version():
+    d = synthetic_dag(width=3, depth=3, seed=0).to_dict()
+    d["version"] = 0
+    with pytest.raises(ValueError, match="version"):
+        SyntheticDAG.from_dict(d)
+
+
+def test_edge_dict_matches_adjacency():
+    dag = synthetic_dag(width=4, depth=5, seed=9)
+    ed = dag.edge_dict()
+    assert len(ed) == dag.n_edges
+    for t in range(dag.n_tasks):
+        for p, g in zip(dag.pred[t], dag.data_gb[t]):
+            assert ed[(p, t)] == g
+
+
+# ---------------------------------------------------------------------------
+# validation: every error names its parameter
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kw,name", [
+    ({"width": 0}, "width"),
+    ({"depth": 0}, "depth"),
+    ({"fanout": 0.5}, "fanout"),
+    ({"data_gb_mean": 0.0}, "data_gb_mean"),
+    ({"data_gb_sigma": -0.1}, "data_gb_sigma"),
+    ({"work_mean": -1.0}, "work_mean"),
+    ({"work_sigma": -2.0}, "work_sigma"),
+])
+def test_degenerate_params_raise_naming_parameter(kw, name):
+    with pytest.raises(ValueError, match=name):
+        synthetic_dag(**kw)
+
+
+def test_cyclic_edges_raise():
+    # 0 -> 1 -> 2 -> 0
+    with pytest.raises(ValueError, match="cycle"):
+        SyntheticDAG(succ=[[1], [2], [0]], pred=[[2], [0], [1]],
+                     data_gb=[[1.0], [1.0], [1.0]], work=[1.0, 1.0, 1.0])
+
+
+def test_mirror_inconsistency_raises():
+    with pytest.raises(ValueError, match="mirror"):
+        SyntheticDAG(succ=[[1], []], pred=[[], []],
+                     data_gb=[[], []], work=[1.0, 1.0])
+
+
+def test_misaligned_data_gb_raises():
+    with pytest.raises(ValueError, match="data_gb"):
+        SyntheticDAG(succ=[[1], []], pred=[[], [0]],
+                     data_gb=[[], []], work=[1.0, 1.0])
+
+
+def test_negative_volume_raises():
+    with pytest.raises(ValueError, match="negative"):
+        SyntheticDAG(succ=[[1], []], pred=[[], [0]],
+                     data_gb=[[], [-0.5]], work=[1.0, 1.0])
+
+
+def test_cost_matrix_validates_speeds():
+    dag = synthetic_dag(width=3, depth=3, seed=0)
+    with pytest.raises(ValueError, match="speeds"):
+        dag.cost_matrix([1.0, 0.0])
+    c = dag.cost_matrix([1.0, 2.0])
+    assert c.shape == (dag.n_tasks, 2)
+    np.testing.assert_allclose(c[:, 0], 2.0 * c[:, 1])
+
+
+def test_scales_past_10k_tasks():
+    dag = synthetic_dag(width=100, depth=140, seed=0)
+    assert dag.n_tasks >= 10_000
+    # flat-triple serialisation stays linear in E
+    assert len(dag.to_dict()["edges"]) == dag.n_edges
